@@ -1,0 +1,45 @@
+"""Paper Fig. 2 / Fig. 4 / Fig. 5: uniform-AM CNN accuracy+PDP, NSGA-II
+interleaving, and displacement robustness — rendered from the persisted
+experiment artifacts (artifacts/paper_cnn_results*.json).
+
+Regenerate with:  PYTHONPATH=src python artifacts/run_paper_cnn.py
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def render(path: pathlib.Path, title: str) -> None:
+    if not path.exists():
+        print(f"({path.name} missing — run artifacts/run_paper_cnn.py)")
+        return
+    res = json.loads(path.read_text())
+    print(f"== {title} (noise_scale={res.get('noise_scale', 1.0):g}) ==")
+    uni = res["uniform"]
+    print(f"{'variant':10s} {'accuracy':>9s} {'PDP pJ':>9s} {'benefit %':>10s}   [Fig 2a]")
+    for v, row in uni.items():
+        print(f"{v:10s} {row['accuracy']:9.4f} {row['pdp_pj']:9.1f} "
+              f"{row['pdp_benefit_pct']:10.2f}")
+    print(f"ranking: {' > '.join(res['ranking'])}")
+    print(f"\n{'K':>3s} {'knee acc':>9s} {'knee PDP':>10s} {'front':>6s} "
+          f"{'disp max':>9s} {'disp mean':>10s}   [Fig 2b/4/5]")
+    for k, st in sorted(res["nsga"].items(), key=lambda t: int(t[0])):
+        disp = res["displacement"][k]
+        print(f"{k:>3s} {1 - st['knee_objectives'][2]:9.4f} "
+              f"{st['knee_objectives'][1]:10.1f} {len(st['front']):6d} "
+              f"{disp['max']:9.4f} {disp['mean']:10.4f}")
+    print()
+
+
+def main() -> None:
+    render(ARTIFACTS / "paper_cnn_results.json",
+           "paper-faithful (calibrated AM noise)")
+    render(ARTIFACTS / "paper_cnn_results_amplified.json",
+           "amplified-noise ablation (beyond paper)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: wall time of the AM numerics paths on this host.
+
+Interpret-mode Pallas timings are NOT TPU projections (the kernel body runs
+in Python); the jnp reference paths are jit-compiled and representative of
+relative cost: exact vs surrogate (~2x matmul) vs bitexact (~10^2 int ops /
+multiply). Prints name,us_per_call,derived CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import surrogate
+from repro.kernels import ref
+
+
+def _bench(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    m = k = n = 256
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    mu = jnp.full((k, n), 1e-6, jnp.float32)
+    sg = jnp.full((k, n), 1e-7, jnp.float32)
+    key = jax.random.PRNGKey(0)
+
+    exact = jax.jit(lambda a, b: a @ b)
+    t_exact = _bench(exact, x, w)
+    print(f"matmul_exact_{m}x{k}x{n},{t_exact:.1f},1.00x")
+
+    surr = jax.jit(lambda a, b, mm, ss, kk: ref.am_surrogate_matmul_ref(a, b, mm, ss)[0])
+    t_surr = _bench(surr, x, w, mu, sg, key)
+    print(f"matmul_am_surrogate_{m}x{k}x{n},{t_surr:.1f},{t_surr/t_exact:.2f}x")
+
+    vids = jnp.asarray(rng.integers(0, 9, (32, 32)), jnp.int32)
+    xb = x[:16, :32]
+    wb = w[:32, :32]
+    bit = jax.jit(lambda a, b, v: ref.am_matmul_bitexact_ref(a, b, v))
+    t_bit = _bench(bit, xb, wb, vids, iters=2)
+    scale = (m * k * n) / (16 * 32 * 32)
+    print(f"matmul_am_bitexact_16x32x32,{t_bit:.1f},"
+          f"{t_bit*scale/t_exact:.0f}x_extrapolated")
+
+    mult = surrogate.moment_tables()
+    print(f"surrogate_calibration_variants,{len(mult[0])},cached")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (optimized) and artifacts/dryrun_baseline/
+(pre-hillclimb) when present; prints per-cell three-term rooflines and the
+before/after comparison for the hillclimbed cells.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def load(d: pathlib.Path) -> dict:
+    out = {}
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def hbm_gib(r: dict) -> float:
+    ma = r["memory_analysis"]
+    return (ma["temp_size_in_bytes"] + ma["argument_size_in_bytes"]
+            + ma["output_size_in_bytes"] - ma["alias_size_in_bytes"]) / 2**30
+
+
+def table(rows: dict, mesh: str = "pod") -> None:
+    print(f"{'arch':27s}{'shape':13s}{'comp_ms':>9s}{'mem_ms':>9s}{'coll_ms':>9s}"
+          f" {'bottleneck':11s}{'useful%':>8s}{'MFU*%':>7s}{'GiB/dev':>8s}")
+    for (a, s, m), r in sorted(rows.items()):
+        if m != mesh:
+            continue
+        print(f"{a:27s}{s:13s}{r['t_compute']*1e3:9.2f}{r['t_memory']*1e3:9.1f}"
+              f"{r['t_collective']*1e3:9.1f} {r['bottleneck']:11s}"
+              f"{r['useful_flops_frac']*100:8.1f}{r['mfu_upper_bound']*100:7.2f}"
+              f"{hbm_gib(r):8.2f}")
+
+
+def main() -> None:
+    opt = load(ARTIFACTS / "dryrun")
+    base = load(ARTIFACTS / "dryrun_baseline")
+    if not opt:
+        print("no dry-run artifacts; run: python -m repro.launch.dryrun --all --mesh both")
+        return
+    print(f"== single-pod (16x16=256 chips) roofline, optimized "
+          f"({len([1 for k in opt if k[2]=='pod'])} cells) ==")
+    table(opt, "pod")
+    print(f"\n== multi-pod (2x16x16=512 chips) roofline, optimized ==")
+    table(opt, "multipod")
+    print("\n== hillclimbed cells: true baseline -> optimized (pod) ==")
+    print("(baseline values from the pre-hillclimb sweep log; those four")
+    print(" artifacts in dryrun_baseline/ were overwritten mid-climb — see")
+    print(" EXPERIMENTS.md §Perf. Baseline memory term = raw traffic model.)")
+    TRUE_BASELINE = {  # (comp_ms, mem_ms, coll_ms, mfu*%)
+        "llama3-8b": (1600.4, 12511.5, 10601.9, 8.01),
+        "phi3.5-moe-42b-a6.6b": (2004.6, 27275.6, 59489.1, 1.39),
+        "llama4-maverick-400b-a17b": (13187.3, 172810.9, 51227.2, 0.80),
+        "xlstm-125m": (82.5, 1532.6, 5081.4, 0.29),
+    }
+    for arch, (bc, bm, bco, bmfu) in TRUE_BASELINE.items():
+        ko = (arch, "train_4k", "pod")
+        if ko in opt:
+            o = opt[ko]
+            print(f"{arch:27s} coll {bco:9.1f} -> {o['t_collective']*1e3:9.1f} ms"
+                  f" | mem {bm:9.1f} -> {o['t_memory']*1e3:9.1f} ms"
+                  f" | MFU* {bmfu:5.2f} -> {o['mfu_upper_bound']*100:5.2f} %")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Benchmark aggregator: one section per paper table/figure + framework perf.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import traceback
+
+from benchmarks import fig2_cnn, kernel_bench, roofline_summary, table1_hw, table2_errors
+
+
+def _section(title: str, fn) -> None:
+    print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
+    try:
+        fn()
+    except Exception:
+        traceback.print_exc()
+
+
+def main() -> None:
+    _section("Table I — hardware characteristics (paper cost model)", table1_hw.main)
+    _section("Table II — FP32 AM error characteristics (N=400k)", table2_errors.main)
+    _section("Fig 2/4/5 — CNN: uniform AMs, NSGA-II interleaving, displacement",
+             fig2_cnn.main)
+    _section("Kernel micro-benchmarks (host)", kernel_bench.main)
+    _section("Roofline — dry-run derived, per (arch x shape x mesh)",
+             roofline_summary.main)
+
+
+if __name__ == "__main__":
+    main()

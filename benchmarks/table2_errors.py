@@ -1,0 +1,58 @@
+"""Paper Table II: error characteristics of the 8 FP32 AMs, N=400000 pairs.
+
+Writes artifacts/table2_errors.json and prints the table. The paper's exact
+numbers depend on its (unpublished) compressor truth tables; the reproduction
+validates bands and directional claims (see tests/test_error_metrics.py).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro.core import errors, fp32_mul, schemes
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
+N = 400_000
+
+
+def run(n: int = N, seed: int = 42, log=print) -> dict:
+    a, b = errors.random_fp32_operands(n, seed=seed)
+    t0 = time.time()
+    exact = fp32_mul.fp32_multiply_batch(a, b, "exact")
+    log(f"exact emulation: {time.time() - t0:.1f}s for {n} pairs")
+    rows = {}
+    for v in schemes.AM_VARIANTS:
+        t0 = time.time()
+        ap = fp32_mul.fp32_multiply_batch(a, b, v)
+        rep = errors.error_metrics(ap, exact, v)
+        log(f"{rep.row()}   [{time.time() - t0:.1f}s]")
+        rows[v] = {
+            "error_rate_pct": rep.error_rate_pct,
+            "mabe_bits": rep.mabe_bits,
+            "mre": rep.mre,
+            "rmsre": rep.rmsre,
+            "pred1_pct": rep.pred1_pct,
+        }
+    out = {"n": n, "seed": seed, "rows": rows}
+    ARTIFACTS.mkdir(exist_ok=True)
+    (ARTIFACTS / "table2_errors.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def main() -> None:
+    cached = ARTIFACTS / "table2_errors.json"
+    if cached.exists():
+        data = json.loads(cached.read_text())
+        print(f"(cached, n={data['n']})")
+        for v, r in data["rows"].items():
+            print(
+                f"{v:8s} ER={r['error_rate_pct']:7.3f}%  MABE={r['mabe_bits']:.3f}  "
+                f"MRE={r['mre']:+.3e}  RMSRE={r['rmsre']:.3e}  PRED1={r['pred1_pct']:.2f}%"
+            )
+        return
+    run()
+
+
+if __name__ == "__main__":
+    main()

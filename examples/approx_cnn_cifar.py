@@ -1,0 +1,53 @@
+"""End-to-end paper reproduction driver: train the 2-conv CNN, evaluate
+uniform AMs, run a small NSGA-II interleaving search, test displacement.
+
+This is the few-minutes version of the full experiment
+(artifacts/run_paper_cnn.py); results land in artifacts/.
+
+  PYTHONPATH=src python examples/approx_cnn_cifar.py [--retrain]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import interleave
+from repro.experiments import paper_cnn
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--retrain", action="store_true",
+                    help="retrain the CNN instead of using the artifact")
+    ap.add_argument("--images", type=int, default=512)
+    args = ap.parse_args()
+
+    if args.retrain:
+        print("training the paper CNN (2 conv layers, 10+12 3x3 kernels)...")
+        params = paper_cnn.train_params(steps=1500, batch=64)
+    else:
+        params = paper_cnn.load_params()
+
+    print(f"\n== uniform AM study ({args.images} test images) ==")
+    uni = paper_cnn.uniform_study(params, args.images)
+    for v, row in uni.items():
+        print(f"  {v:8s} acc={row['accuracy']:.4f} "
+              f"PDP benefit={row['pdp_benefit_pct']:6.2f}%")
+
+    print("\n== NSGA-II interleaving, K=4 (small budget) ==")
+    res = paper_cnn.nsga_study(params, k=4, n_images=256, pop_size=10,
+                               generations=4, log=print)
+    knee_acc = 1 - res["knee_objectives"][2]
+    print(f"  knee: acc={knee_acc:.4f} area={res['knee_objectives'][0]:.0f}um2 "
+          f"pdp={res['knee_objectives'][1]:.1f}pJ")
+
+    print("\n== displacement robustness (paper Fig. 5) ==")
+    disp = paper_cnn.displacement_study(
+        params, np.asarray(res["knee_genome"], np.int32),
+        n_perms=5, n_images=args.images)
+    print(f"  displaced accuracies: {['%.4f' % a for a in disp['accuracies']]}")
+    print(f"  max={disp['max']:.4f} mean={disp['mean']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

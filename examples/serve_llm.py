@@ -1,0 +1,39 @@
+"""Serve a (reduced) assigned architecture with continuous batching.
+
+  PYTHONPATH=src python examples/serve_llm.py --arch recurrentgemma-9b
+"""
+import argparse
+
+import numpy as np
+
+from repro.launch import mesh as meshlib
+from repro.launch.serve import Request, Server
+from repro.models import registry as R
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m", choices=R.ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = R.get(args.arch).smoke
+    if R.is_encdec(cfg):
+        print(f"{args.arch} is encoder-decoder; serve_llm drives decoder-only "
+              "archs — pick another (the encdec decode path is covered by "
+              "tests/test_models.py).")
+        return
+    server = Server(cfg, meshlib.make_host_mesh(), slots=2, ctx=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 6).astype(np.int32),
+                    max_new=args.max_new) for i in range(args.requests)]
+    for r in reqs:
+        server.submit(r)
+    server.run(max_steps=args.max_new * args.requests + 8)
+    for r in reqs:
+        print(f"req {r.rid}: prompt={r.prompt.tolist()} -> {r.out}")
+
+
+if __name__ == "__main__":
+    main()

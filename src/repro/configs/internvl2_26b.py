@@ -1,0 +1,48 @@
+"""internvl2-26b [vlm]: 48L d6144 48H (GQA kv=8) d_ff=16384 vocab=92553.
+
+InternLM2-20B language backbone (arXiv:2404.16821); the InternViT vision
+frontend is a STUB — input_specs provides precomputed patch embeddings
+(B, 256, d) that replace the first 256 positions. Full attention ->
+long_500k SKIPPED.
+"""
+from repro.models.registry import ArchSpec
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92553,
+    pattern=(("attn_full", "swiglu"),),
+    frontend="vision_stub",
+    n_patches=256,
+    rope_theta=1e6,
+    microbatches=8,
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-smoke",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=96,
+    vocab=256,
+    pattern=(("attn_full", "swiglu"),),
+    frontend="vision_stub",
+    n_patches=4,
+    remat=False,
+)
+
+SPEC = ArchSpec(
+    name="internvl2-26b",
+    config=CONFIG,
+    smoke=SMOKE,
+    skip_shapes=("long_500k",),
+    skip_reasons={"long_500k": "pure full attention"},
+)

@@ -1,0 +1,42 @@
+"""llama3-8b [dense]: 32L d4096 32H (GQA kv=8) d_ff=14336 vocab=128256.
+
+GQA, RoPE theta 5e5, 128k vocab (arXiv:2407.21783). Full attention ->
+long_500k SKIPPED.
+"""
+from repro.models.registry import ArchSpec
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=128256,
+    pattern=(("attn_full", "swiglu"),),
+    rope_theta=5e5,
+    microbatches=8,
+)
+
+SMOKE = ModelConfig(
+    name="llama3-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=256,
+    pattern=(("attn_full", "swiglu"),),
+    remat=False,
+)
+
+SPEC = ArchSpec(
+    name="llama3-8b",
+    config=CONFIG,
+    smoke=SMOKE,
+    skip_shapes=("long_500k",),
+    skip_reasons={"long_500k": "pure full attention"},
+)

@@ -1,0 +1,50 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, 128 experts top-1.
+
+MoE interleaved every other layer (as in the released Maverick: dense/MoE
+alternation keeps the total at ~400B with 128 experts; a 48x128-expert
+all-MoE stack would be ~773B). Chunked-local attention (8192) -> long_500k
+RUNS. Expert dim shards over "data" (EP), expert d_ff over "model" (TP).
+"""
+from repro.models.registry import ArchSpec
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=202048,
+    pattern=(("attn_chunked", "swiglu"), ("attn_chunked", "moe")),
+    window=8192,
+    n_experts=128,
+    top_k=1,
+    moe_group=512,
+    capacity_factor=1.25,
+    rope_theta=5e5,
+    subquadratic=True,
+    microbatches=8,
+)
+
+SMOKE = ModelConfig(
+    name="llama4-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=96,
+    vocab=256,
+    pattern=(("attn_chunked", "swiglu"), ("attn_chunked", "moe")),
+    window=8,
+    n_experts=4,
+    top_k=1,
+    moe_group=16,
+    subquadratic=True,
+    remat=False,
+)
+
+SPEC = ArchSpec(name="llama4-maverick-400b-a17b", config=CONFIG, smoke=SMOKE)

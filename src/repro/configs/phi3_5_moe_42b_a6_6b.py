@@ -1,0 +1,48 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L d4096 32H (GQA kv=8) d_ff=6400 vocab=32064,
+16 experts top-2 (hf:microsoft/Phi-3.5-MoE-instruct). Every layer is MoE.
+Full attention -> long_500k SKIPPED.
+"""
+from repro.models.registry import ArchSpec
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6400,
+    vocab=32064,
+    pattern=(("attn_full", "moe"),),
+    n_experts=16,
+    top_k=2,
+    moe_group=256,
+    capacity_factor=1.25,
+    rope_theta=1e4,
+    microbatches=4,
+)
+
+SMOKE = ModelConfig(
+    name="phi3.5-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=96,
+    vocab=256,
+    pattern=(("attn_full", "moe"),),
+    n_experts=4,
+    top_k=2,
+    moe_group=16,
+    remat=False,
+)
+
+SPEC = ArchSpec(
+    name="phi3.5-moe-42b-a6.6b",
+    config=CONFIG,
+    smoke=SMOKE,
+    skip_shapes=("long_500k",),
+    skip_reasons={"long_500k": "pure full attention"},
+)

@@ -1,0 +1,43 @@
+"""qwen2.5-3b [dense]: 36L d2048 16H (GQA kv=2) d_ff=11008 vocab=151936.
+
+GQA with QKV bias (hf:Qwen/Qwen2.5). Full attention -> long_500k SKIPPED.
+"""
+from repro.models.registry import ArchSpec
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    n_layers=36,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=2,
+    d_ff=11008,
+    vocab=151936,
+    pattern=(("attn_full", "swiglu"),),
+    qkv_bias=True,
+    rope_theta=1e6,
+    microbatches=2,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2.5-smoke",
+    family="dense",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=96,
+    vocab=256,
+    pattern=(("attn_full", "swiglu"),),
+    qkv_bias=True,
+    remat=False,
+)
+
+SPEC = ArchSpec(
+    name="qwen2.5-3b",
+    config=CONFIG,
+    smoke=SMOKE,
+    skip_shapes=("long_500k",),
+    skip_reasons={"long_500k": "pure full attention"},
+)

@@ -1,0 +1,55 @@
+"""recurrentgemma-9b [hybrid]: 38L d4096 16H (GQA kv=1, d_head 256)
+d_ff=12288 vocab=256000.
+
+Griffin architecture (arXiv:2402.19427): RG-LRU recurrent blocks + local
+(sliding-window-2048) attention in a 2:1 ratio; 38 layers = 12 full
+(rglru, rglru, attn) superblocks + 2 tail rglru layers. Linear recurrence
+-> long_500k RUNS (O(1) state; window-bounded attention cache).
+"""
+from repro.models.registry import ArchSpec
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_head=256,
+    d_ff=12288,
+    vocab=256000,
+    pattern=(
+        ("rglru", "swiglu"),
+        ("rglru", "swiglu"),
+        ("attn_sliding", "swiglu"),
+    ),
+    window=2048,
+    d_rnn=4096,
+    rope_theta=1e4,
+    subquadratic=True,
+    microbatches=4,
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-smoke",
+    family="hybrid",
+    n_layers=4,
+    d_model=64,
+    n_heads=2,
+    n_kv_heads=1,
+    d_head=32,
+    d_ff=96,
+    vocab=256,
+    pattern=(
+        ("rglru", "swiglu"),
+        ("rglru", "swiglu"),
+        ("attn_sliding", "swiglu"),
+    ),
+    window=8,
+    d_rnn=64,
+    subquadratic=True,
+    remat=False,
+)
+
+SPEC = ArchSpec(name="recurrentgemma-9b", config=CONFIG, smoke=SMOKE)

@@ -1,0 +1,51 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec, 24L d1024 16H (MHA kv=16)
+d_ff=8192 vocab=256206 (arXiv:2308.11596).
+
+24 encoder + 24 decoder layers; the speech frontend is a STUB — input_specs
+provides precomputed frame embeddings (B, S, d). Decoder decode carries a
+self-attn cache plus fixed cross-attn KV over a 4096-frame encoder memory.
+Enc-dec with full attention -> long_500k SKIPPED.
+"""
+from repro.models.registry import ArchSpec
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,
+    n_enc_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=256206,
+    pattern=(("attn_full", "gelu"),),
+    mlp_kind="gelu",
+    frontend="audio_stub",
+    rope_theta=1e4,
+    microbatches=2,
+)
+
+SMOKE = ModelConfig(
+    name="seamless-smoke",
+    family="audio",
+    n_layers=2,
+    n_enc_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=96,
+    vocab=256,
+    pattern=(("attn_full", "gelu"),),
+    mlp_kind="gelu",
+    frontend="audio_stub",
+    remat=False,
+)
+
+SPEC = ArchSpec(
+    name="seamless-m4t-large-v2",
+    config=CONFIG,
+    smoke=SMOKE,
+    skip_shapes=("long_500k",),
+    skip_reasons={"long_500k": "enc-dec with full attention"},
+)

@@ -1,0 +1,44 @@
+"""smollm-360m [dense]: 32L d960 15H (GQA kv=5) d_ff=2560 vocab=49152.
+
+Llama-architecture small model (hf:HuggingFaceTB/SmolLM). 15 heads / 5 KV
+heads do not divide the 16-way model axis -> attention projections stay
+replicated (rule table drops the axis); the MLP (2560 = 16*160) still TPs.
+Full attention -> long_500k SKIPPED.
+"""
+from repro.models.registry import ArchSpec
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    n_layers=32,
+    d_model=960,
+    n_heads=15,
+    n_kv_heads=5,
+    d_ff=2560,
+    vocab=49152,
+    pattern=(("attn_full", "swiglu"),),
+    rope_theta=1e4,
+    microbatches=1,
+)
+
+SMOKE = ModelConfig(
+    name="smollm-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=60,
+    n_heads=3,
+    n_kv_heads=1,
+    d_ff=96,
+    vocab=256,
+    pattern=(("attn_full", "swiglu"),),
+    remat=False,
+)
+
+SPEC = ArchSpec(
+    name="smollm-360m",
+    config=CONFIG,
+    smoke=SMOKE,
+    skip_shapes=("long_500k",),
+    skip_reasons={"long_500k": "pure full attention; 512k decode cache is quadratic-cost"},
+)

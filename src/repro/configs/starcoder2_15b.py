@@ -1,0 +1,44 @@
+"""starcoder2-15b [dense]: 40L d6144 48H (GQA kv=4) d_ff=24576 vocab=49152.
+
+GQA + RoPE + sliding-window-4096 attention (arXiv:2402.19173), GELU MLP,
+QKV bias. The 4096 sliding window is sub-quadratic -> long_500k RUNS.
+"""
+from repro.models.registry import ArchSpec
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    d_ff=24576,
+    vocab=49152,
+    pattern=(("attn_sliding", "gelu"),),
+    mlp_kind="gelu",
+    window=4096,
+    qkv_bias=True,
+    rope_theta=1e5,
+    subquadratic=True,
+    microbatches=8,
+)
+
+SMOKE = ModelConfig(
+    name="starcoder2-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=256,
+    pattern=(("attn_sliding", "gelu"),),
+    mlp_kind="gelu",
+    window=8,
+    qkv_bias=True,
+    subquadratic=True,
+    remat=False,
+)
+
+SPEC = ArchSpec(name="starcoder2-15b", config=CONFIG, smoke=SMOKE)

@@ -1,0 +1,135 @@
+"""AM-aware linear layers: the paper's technique as a first-class numerics mode.
+
+Every weight-bearing matmul in the framework routes through `am_dense` /
+`am_einsum`, which dispatch on `NumericsConfig.mode`:
+
+  * "exact"     — native matmul in the model dtype (baseline / dry-run default)
+  * "surrogate" — calibrated statistical AM emulation (core/surrogate.py) with
+                  a per-weight-tile variant map (the interleaving technique at
+                  LM scale); costs ~2x matmul FLOPs, runs on the MXU.
+  * "bitexact"  — full bit-level emulation (core/fp32_mul.py); used for the
+                  paper CNN, kernel oracles and small validation runs only.
+
+Tile->variant assignment policies:
+  "uniform:<variant>"  — one AM everywhere (paper Fig. 2a setting)
+  "rr:<K>"             — round-robin over the top-K accuracy-ranked alphabet
+                         (the paper's interleaving insight as a static policy)
+  "seq:<name>"         — a named NSGA-II-optimized sequence registered at
+                         runtime via `register_sequence`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fp32_mul, interleave, schemes, surrogate
+
+_REGISTERED_SEQUENCES: dict[str, np.ndarray] = {}
+
+
+def register_sequence(name: str, variant_ids: np.ndarray) -> None:
+    """Register an optimized flat tile sequence under `seq:<name>`."""
+    _REGISTERED_SEQUENCES[name] = np.asarray(variant_ids, np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsConfig:
+    mode: str = "exact"  # exact | surrogate | bitexact
+    policy: str = "uniform:pm_csi"
+    tile_k: int = 128
+    tile_n: int = 128
+
+    def __post_init__(self):
+        assert self.mode in ("exact", "surrogate", "bitexact"), self.mode
+
+
+EXACT = NumericsConfig(mode="exact")
+
+
+@functools.lru_cache(maxsize=4096)
+def _tile_grid(policy: str, gk: int, gn: int) -> np.ndarray:
+    """Deterministic (gk, gn) variant-id grid for a policy."""
+    n = gk * gn
+    if policy.startswith("uniform:"):
+        seq = interleave.uniform_sequence(policy.split(":", 1)[1], n)
+    elif policy.startswith("rr:"):
+        k = int(policy.split(":", 1)[1])
+        alpha = np.asarray(interleave.alphabet_for_k(k), np.int32)
+        seq = alpha[np.arange(n) % k]
+    elif policy.startswith("seq:"):
+        seq = _REGISTERED_SEQUENCES[policy.split(":", 1)[1]]
+        if seq.size < n:  # tile the registered sequence to cover the grid
+            seq = np.resize(seq, n)
+        seq = seq[:n]
+    else:
+        raise ValueError(f"unknown numerics policy {policy!r}")
+    return seq.reshape(gk, gn)
+
+
+def _moment_maps(cfg: NumericsConfig, k: int, n: int):
+    gk = -(-k // cfg.tile_k)
+    gn = -(-n // cfg.tile_n)
+    grid = _tile_grid(cfg.policy, gk, gn)
+    return surrogate.tile_moments(grid, k, n, cfg.tile_k, cfg.tile_n)
+
+
+def am_dense(x, w, *, cfg: NumericsConfig = EXACT, key=None):
+    """x (..., K) @ w (K, N) under the configured numerics."""
+    if cfg.mode == "exact":
+        return x @ w
+    if cfg.mode == "surrogate":
+        assert key is not None, "surrogate numerics needs a PRNG key"
+        mu, sg = _moment_maps(cfg, w.shape[0], w.shape[1])
+        y = surrogate.am_matmul_surrogate(
+            x.astype(jnp.float32), w.astype(jnp.float32), mu, sg, key
+        )
+        return y.astype(x.dtype)
+    return bitexact_matmul(x, w, cfg)
+
+
+def am_einsum(spec: str, x, w, *, cfg: NumericsConfig = EXACT, key=None):
+    """Einsum with AM numerics; the variant tile map covers w's last two dims.
+
+    Supports any contraction where `w` carries the contracting + output dims
+    (all projection/expert matmuls in the model zoo).
+    """
+    if cfg.mode == "exact":
+        return jnp.einsum(spec, x, w)
+    if cfg.mode == "surrogate":
+        assert key is not None
+        k, n = w.shape[-2], w.shape[-1]
+        mu, sg = _moment_maps(cfg, k, n)
+        xf = x.astype(jnp.float32)
+        wf = w.astype(jnp.float32)
+        mean = jnp.einsum(spec, xf, wf * (1.0 + mu))
+        var = jnp.einsum(spec, xf * xf, (wf * wf) * (sg * sg))
+        z = jax.random.normal(key, mean.shape, dtype=mean.dtype)
+        return (mean + z * jnp.sqrt(jnp.maximum(var, 0.0))).astype(x.dtype)
+    raise NotImplementedError("bitexact einsum: use am_dense on 2-D slices")
+
+
+def bitexact_matmul(x, w, cfg: NumericsConfig):
+    """Bit-level AM matmul (small shapes only: O(MKN) emulated multiplies)."""
+    k, n = w.shape
+    gk = -(-k // cfg.tile_k)
+    gn = -(-n // cfg.tile_n)
+    grid = _tile_grid(cfg.policy, gk, gn)
+    vk = np.repeat(np.repeat(grid, cfg.tile_k, 0), cfg.tile_n, 1)[:k, :n]
+    vids = jnp.asarray(vk, jnp.int32)
+
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+
+    def row(xr):
+        prods = fp32_mul.fp32_multiply_interleaved(
+            jnp.broadcast_to(xr[:, None], (k, n)),
+            w.astype(jnp.float32),
+            vids,
+        )
+        return jnp.sum(prods, axis=0)
+
+    y = jax.lax.map(row, x2)
+    return y.reshape(x.shape[:-1] + (n,)).astype(x.dtype)

@@ -1,0 +1,99 @@
+"""Exact and approximate 4:2 compressors (bit-level, vectorized).
+
+A 4:2 compressor takes four partial-product bits ``x1..x4`` of one column plus a
+carry-in ``cin`` from the previous column and emits
+
+    x1 + x2 + x3 + x4 + cin  =  sum + 2*(carry + cout)
+
+``cout`` depends only on ``x1..x3`` so the per-stage column chain is
+non-recursive (cout of column j feeds cin of column j+1 *within* the stage).
+
+The paper builds its eight FP32 multipliers from *positive* compressors (PCs,
+error >= 0) and *negative* compressors (NCs, error <= 0) taken from its ref [9]
+(ISQED'23), whose gate-level tables are not reproduced in the paper text. We
+design compressors to the same spec — single-direction, low-rate error, exact
+``cout`` so error stays local to the column pair — and validate that the eight
+assembled FP32 multipliers land in the paper's reported metric ranges
+(see tests/test_error_metrics.py).
+
+Truth-table error summary (derived in tests):
+  PC1: +1 when (x1^x2^x3^x4^cin)==0 and x3&x4        (p = 1/8 on iid bits)
+  PC2: +2 when x1^x2 and x3&x4 and cin==0            (p = 1/16)
+  NC1: -1 when cin==1 (cin ignored)                  (p = P[cin])
+  NC2: NC1 plus -2 when x1&x2&x3&x4                  (extra p = 1/16)
+
+All functions operate on int32 {0,1} arrays of any broadcastable shape; the
+``code`` argument selects the compressor per element, enabling per-column /
+per-stage / per-slot interleaving in a single vectorized pass.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Compressor codes (order matters: used by jnp indexed selection).
+EXACT = 0
+PC1 = 1
+PC2 = 2
+NC1 = 3
+NC2 = 4
+N_COMPRESSORS = 5
+
+CODE_NAMES = {EXACT: "EXACT", PC1: "PC1", PC2: "PC2", NC1: "NC1", NC2: "NC2"}
+
+
+def cout42(x1, x2, x3):
+    """Exact cout (carry of the first embedded full-adder). Exact in all designs."""
+    return (x1 & x2) | ((x1 ^ x2) & x3)
+
+
+def compress42(x1, x2, x3, x4, cin, code):
+    """Vectorized 4:2 compression with per-element compressor selection.
+
+    Args:
+      x1..x4, cin: int32 {0,1} arrays (broadcastable).
+      code: int32 array of compressor codes (broadcastable against the bits).
+
+    Returns:
+      (sum, carry, cout) int32 {0,1} arrays.
+    """
+    t = x1 ^ x2 ^ x3
+    sx = t ^ x4
+    cout = cout42(x1, x2, x3)
+
+    sum_exact = sx ^ cin
+    carry_exact = (sx & cin) | (t & x4)
+
+    # PC1: or an extra positive term into sum.
+    sum_pc1 = sum_exact | (x1 & x2) | (x3 & x4)
+    carry_pc1 = carry_exact
+    # PC2: or an extra positive term into carry.
+    sum_pc2 = sum_exact
+    carry_pc2 = carry_exact | ((x1 ^ x2) & x3 & x4)
+    # NC1: drop the carry-in entirely.
+    sum_nc1 = sx
+    carry_nc1 = t & x4
+    # NC2: NC1 plus a dropped carry on the all-ones pattern.
+    sum_nc2 = sx
+    carry_nc2 = (t & x4) & (1 - (x1 & x2 & x3 & x4))
+
+    # Branch-free selection (codes are data, may vary per element).
+    def sel(e, p1, p2, n1, n2):
+        out = jnp.where(code == PC1, p1, e)
+        out = jnp.where(code == PC2, p2, out)
+        out = jnp.where(code == NC1, n1, out)
+        out = jnp.where(code == NC2, n2, out)
+        return out
+
+    s = sel(sum_exact, sum_pc1, sum_pc2, sum_nc1, sum_nc2)
+    c = sel(carry_exact, carry_pc1, carry_pc2, carry_nc1, carry_nc2)
+    return s, c, cout
+
+
+def compressor_value_error(x1, x2, x3, x4, cin, code):
+    """Signed value error (approx - exact) of one compressor application.
+
+    Used by property tests to assert PC errors >= 0 and NC errors <= 0.
+    """
+    s, c, co = compress42(x1, x2, x3, x4, cin, code)
+    exact = x1 + x2 + x3 + x4 + cin
+    return (s + 2 * (c + co)) - exact

@@ -1,0 +1,90 @@
+"""Error metrics for approximate multipliers (paper Table II).
+
+Bit-level: Error Rate (ER), Hamming distance (Hd), Mean Absolute Bit Error
+(MABE). Relative: Mean Relative Error (MRE, signed), Root Mean Square Relative
+Error (RMSRE), PRED_tau (fraction of outputs with |relative error| <= tau %).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorReport:
+    variant: str
+    n: int
+    error_rate_pct: float
+    mabe_bits: float
+    mre: float
+    rmsre: float
+    pred1_pct: float
+
+    def row(self) -> str:
+        return (
+            f"{self.variant:12s} ER={self.error_rate_pct:7.3f}%  "
+            f"MABE={self.mabe_bits:6.3f}  MRE={self.mre:+.3e}  "
+            f"RMSRE={self.rmsre:.3e}  PRED1={self.pred1_pct:6.2f}%"
+        )
+
+
+def _bits(x: np.ndarray) -> np.ndarray:
+    return x.astype(np.float32).view(np.uint32)
+
+
+def popcount32(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    x = x - ((x >> 1) & np.uint32(0x55555555))
+    x = (x & np.uint32(0x33333333)) + ((x >> 2) & np.uint32(0x33333333))
+    x = (x + (x >> 4)) & np.uint32(0x0F0F0F0F)
+    return ((x * np.uint32(0x01010101)) >> 24).astype(np.int32)
+
+
+def error_metrics(
+    approx: np.ndarray, exact: np.ndarray, variant: str = "", tau_pct: float = 1.0
+) -> ErrorReport:
+    """Compute Table-II metrics of `approx` against `exact` (both float32)."""
+    approx = np.asarray(approx, np.float32).ravel()
+    exact = np.asarray(exact, np.float32).ravel()
+    assert approx.shape == exact.shape
+    n = approx.size
+
+    xor = _bits(approx) ^ _bits(exact)
+    hd = popcount32(xor)
+    er = float(np.mean(hd > 0) * 100.0)
+    mabe = float(np.mean(hd))
+
+    ok = np.isfinite(exact) & (exact != 0) & np.isfinite(approx)
+    rel = (approx[ok].astype(np.float64) - exact[ok]) / exact[ok].astype(np.float64)
+    mre = float(np.mean(rel)) if rel.size else 0.0
+    rmsre = float(np.sqrt(np.mean(rel**2))) if rel.size else 0.0
+    pred = float(np.mean(np.abs(rel) <= tau_pct / 100.0) * 100.0) if rel.size else 100.0
+
+    return ErrorReport(
+        variant=variant,
+        n=n,
+        error_rate_pct=er,
+        mabe_bits=mabe,
+        mre=mre,
+        rmsre=rmsre,
+        pred1_pct=pred,
+    )
+
+
+def random_fp32_operands(n: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """N random FP32 operand pairs over a wide but finite range.
+
+    Mirrors the paper's N=400000 random-input error analysis: uniform signs,
+    exponents spanning a wide normal range, uniform mantissas.
+    """
+    rng = np.random.default_rng(seed)
+
+    def draw():
+        sign = rng.integers(0, 2, n, dtype=np.uint32) << 31
+        # Exponents in [64, 191] keep products finite/normal (no overflow tail).
+        exp = rng.integers(64, 192, n, dtype=np.uint32) << 23
+        man = rng.integers(0, 1 << 23, n, dtype=np.uint32)
+        return (sign | exp | man).view(np.float32)
+
+    return draw(), draw()

@@ -1,0 +1,73 @@
+"""Multiplier-slot variant maps: the paper's interleaving mechanism.
+
+Two granularities:
+  * conv slots — (filter, kh, kw) positions; the paper's CNN has
+    (10 + 12) filters x 3x3 = 198 slots, one AM variant per slot, shared
+    across input channels (paper counts 9 coefficients per kernel).
+  * weight tiles — for LM-scale matmuls each (tile_k x tile_n) tile of a
+    projection matrix is a slot (DESIGN.md Sec. 2, "slot granularity").
+
+Sequences are int arrays of variant ids (0 exact, 1..8 = paper AMs in
+schemes.VARIANTS order).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import schemes
+
+PAPER_SLOT_COUNT = 198  # 22 filters x 9 coefficients
+
+
+def conv_slot_map(sequence: np.ndarray, layer_filters: list[int], kh: int = 3, kw: int = 3):
+    """Split a flat slot sequence into per-layer (F, kh, kw) variant maps."""
+    seq = np.asarray(sequence, np.int32).ravel()
+    total = sum(f * kh * kw for f in layer_filters)
+    if seq.size != total:
+        raise ValueError(f"sequence length {seq.size} != total slots {total}")
+    maps, off = [], 0
+    for f in layer_filters:
+        n = f * kh * kw
+        maps.append(seq[off : off + n].reshape(f, kh, kw))
+        off += n
+    return maps
+
+
+def tile_map(sequence: np.ndarray, k: int, n: int, tile_k: int = 128, tile_n: int = 128):
+    """Reshape a flat sequence into a (ceil(K/tk), ceil(N/tn)) tile grid."""
+    gk = -(-k // tile_k)
+    gn = -(-n // tile_n)
+    seq = np.asarray(sequence, np.int32).ravel()
+    if seq.size != gk * gn:
+        raise ValueError(f"sequence length {seq.size} != tile grid {gk}x{gn}")
+    return seq.reshape(gk, gn)
+
+
+def uniform_sequence(variant: str, n_slots: int) -> np.ndarray:
+    return np.full(n_slots, schemes.VARIANT_IDS[variant], np.int32)
+
+
+def sequence_from_counts(counts: dict[int, int]) -> np.ndarray:
+    """Build a sequence from {variant_id: count} (order = ascending id)."""
+    parts = [np.full(c, v, np.int32) for v, c in sorted(counts.items())]
+    return np.concatenate(parts) if parts else np.zeros(0, np.int32)
+
+
+def random_displacement(sequence: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Random permutation of slot positions, preserving the variant multiset.
+
+    Paper Sec. III-A / Fig. 5: the NSGA-II sequence is position-agnostic, so 10
+    random displacements per K probe placement sensitivity.
+    """
+    return rng.permutation(np.asarray(sequence, np.int32))
+
+
+def alphabet_for_k(k: int) -> list[int]:
+    """Paper's accuracy-ranked alphabet: the top-K AMs by uniform-CNN accuracy.
+
+    Ranking (paper Fig. 2a): PMCSI, NMSI, NMCSI, NMNI, PMSI, PMCI, PMNI, NMCI.
+    Our framework re-derives its own ranking at experiment time; this static
+    order is the paper's, used as the default alphabet.
+    """
+    order = ["pm_csi", "nm_si", "nm_csi", "nm_ni", "pm_si", "pm_ci", "pm_ni", "nm_ci"]
+    return [schemes.VARIANT_IDS[v] for v in order[:k]]

@@ -1,0 +1,158 @@
+"""NSGA-II: non-dominated sorting genetic algorithm (Deb et al., 2002).
+
+Generic integer-genome implementation used by the paper's multiplier-sequence
+optimization (paper Sec. III-A): minimize the objective vector
+(area, PDP, accuracy-loss) over length-198 variant-id sequences.
+
+The paper's "double approximation": the genome is treated as position-
+agnostic (a multiset of variants), so crossover/mutation operate on the flat
+sequence but fitness ignores ordering — exactly the speedup the paper claims
+over per-slot NSGA-II. `experiments/paper_cnn.py` then probes positional
+sensitivity with random displacements (paper Fig. 5).
+
+Pure numpy; the (possibly expensive) objective function is user-supplied and
+may itself call jit'd JAX evaluation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Individual:
+    genome: np.ndarray  # int32 vector
+    objectives: np.ndarray | None = None  # float64 vector, minimized
+    rank: int = -1
+    crowding: float = 0.0
+
+
+def fast_non_dominated_sort(objs: np.ndarray) -> list[np.ndarray]:
+    """Return fronts (lists of indices) by Pareto rank. objs: (P, M), minimized."""
+    p = objs.shape[0]
+    # dominates[i, j] = i dominates j.
+    le = (objs[:, None, :] <= objs[None, :, :]).all(-1)
+    lt = (objs[:, None, :] < objs[None, :, :]).any(-1)
+    dominates = le & lt
+    n_dom = dominates.sum(0)  # how many dominate each point
+    fronts = []
+    assigned = np.zeros(p, bool)
+    current = np.where(n_dom == 0)[0]
+    while current.size:
+        fronts.append(current)
+        assigned[current] = True
+        # remove current front's domination counts
+        n_dom = n_dom - dominates[current].sum(0)
+        current = np.where((n_dom == 0) & ~assigned)[0]
+    return fronts
+
+
+def crowding_distance(objs: np.ndarray) -> np.ndarray:
+    """Crowding distance within one front. objs: (F, M)."""
+    f, m = objs.shape
+    if f <= 2:
+        return np.full(f, np.inf)
+    d = np.zeros(f)
+    for j in range(m):
+        order = np.argsort(objs[:, j], kind="stable")
+        span = objs[order[-1], j] - objs[order[0], j]
+        d[order[0]] = d[order[-1]] = np.inf
+        if span > 0:
+            d[order[1:-1]] += (objs[order[2:], j] - objs[order[:-2], j]) / span
+    return d
+
+
+def _rank_population(pop: list[Individual]) -> None:
+    objs = np.stack([ind.objectives for ind in pop])
+    for r, front in enumerate(fast_non_dominated_sort(objs)):
+        cd = crowding_distance(objs[front])
+        for i, idx in enumerate(front):
+            pop[idx].rank = r
+            pop[idx].crowding = cd[i]
+
+
+def _tournament(pop: list[Individual], rng: np.random.Generator) -> Individual:
+    a, b = rng.integers(0, len(pop), 2)
+    pa, pb = pop[a], pop[b]
+    if pa.rank != pb.rank:
+        return pa if pa.rank < pb.rank else pb
+    return pa if pa.crowding > pb.crowding else pb
+
+
+def _crossover(g1: np.ndarray, g2: np.ndarray, rng: np.random.Generator):
+    mask = rng.random(g1.size) < 0.5  # uniform crossover
+    c1 = np.where(mask, g1, g2)
+    c2 = np.where(mask, g2, g1)
+    return c1, c2
+
+
+def _mutate(g: np.ndarray, alphabet: np.ndarray, rate: float, rng: np.random.Generator):
+    mask = rng.random(g.size) < rate
+    repl = alphabet[rng.integers(0, alphabet.size, g.size)]
+    return np.where(mask, repl, g).astype(np.int32)
+
+
+def optimize(
+    objective_fn: Callable[[np.ndarray], np.ndarray],
+    genome_len: int,
+    alphabet: Sequence[int],
+    *,
+    pop_size: int = 24,
+    generations: int = 20,
+    mutation_rate: float | None = None,
+    seed: int = 0,
+    log: Callable[[str], None] | None = None,
+) -> list[Individual]:
+    """Run NSGA-II; returns the final population's first Pareto front.
+
+    Args:
+      objective_fn: genome (int32 (L,)) -> objective vector (M,), minimized.
+      genome_len: L (198 for the paper's CNN).
+      alphabet: allowed variant ids (the paper's top-K accuracy-ranked AMs).
+    """
+    rng = np.random.default_rng(seed)
+    alpha = np.asarray(list(alphabet), np.int32)
+    rate = mutation_rate if mutation_rate is not None else 2.0 / genome_len
+
+    def new_ind(g):
+        return Individual(genome=g, objectives=np.asarray(objective_fn(g), float))
+
+    pop = [
+        new_ind(alpha[rng.integers(0, alpha.size, genome_len)])
+        for _ in range(pop_size)
+    ]
+    # Seed uniform-variant genomes so single-AM deployments are reachable.
+    for i, v in enumerate(alpha[: max(1, pop_size // 8)]):
+        pop[i] = new_ind(np.full(genome_len, v, np.int32))
+    _rank_population(pop)
+
+    for gen in range(generations):
+        children = []
+        while len(children) < pop_size:
+            p1, p2 = _tournament(pop, rng), _tournament(pop, rng)
+            c1, c2 = _crossover(p1.genome, p2.genome, rng)
+            children.append(new_ind(_mutate(c1, alpha, rate, rng)))
+            if len(children) < pop_size:
+                children.append(new_ind(_mutate(c2, alpha, rate, rng)))
+        union = pop + children
+        _rank_population(union)
+        union.sort(key=lambda ind: (ind.rank, -ind.crowding))
+        pop = union[:pop_size]
+        _rank_population(pop)
+        if log:
+            f0 = [ind for ind in pop if ind.rank == 0]
+            best = min(ind.objectives[-1] for ind in f0)
+            log(f"gen {gen + 1}/{generations}: front0={len(f0)} best_last_obj={best:.4f}")
+
+    return [ind for ind in pop if ind.rank == 0]
+
+
+def knee_point(front: list[Individual]) -> Individual:
+    """Pick the paper's 'highlighted red' solution: min normalized L2 to ideal."""
+    objs = np.stack([ind.objectives for ind in front])
+    lo, hi = objs.min(0), objs.max(0)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    norm = (objs - lo) / span
+    return front[int(np.argmin(np.linalg.norm(norm, axis=1)))]

@@ -1,0 +1,93 @@
+"""Interleaving schemes: (stage, column) -> compressor-code maps.
+
+The compressor tree has 3 reduction stages over 48 columns. Approximate
+compressors occupy columns 0..23 ("upto 24 columns of the PPs along all the
+reduction stages", paper Sec. II-A); columns 24..47 stay exact.
+
+Eight FP32 AM variants (paper Sec. II):
+  PM* lean positive (PC-dominant), NM* lean negative (NC-dominant), with the
+  interleave pattern NI (one type), SI (per-stage alternation), CI (per-column
+  alternation), CSI (stage+column checkerboard).
+
+A scheme map is an int32 (3, 48) array of compressor codes; maps broadcast
+against batch dims, and per-slot interleaving passes per-element stacks of
+these maps (see core/interleave.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compressors as C
+
+N_STAGES = 3
+N_COLS = 48
+APPROX_COLS = 24  # columns [0, 24) are approximate
+
+# Variant ids: 0 is the exact multiplier; 1..8 the paper's eight AMs.
+VARIANTS = (
+    "exact",
+    "pm_ni",
+    "pm_si",
+    "pm_ci",
+    "pm_csi",
+    "nm_ni",
+    "nm_si",
+    "nm_ci",
+    "nm_csi",
+)
+VARIANT_IDS = {name: i for i, name in enumerate(VARIANTS)}
+AM_VARIANTS = VARIANTS[1:]
+N_VARIANTS = len(VARIANTS)
+
+# Paper display names, e.g. FP32_PMCSI.
+PAPER_NAMES = {
+    "exact": "Exact",
+    "pm_ni": "FP32_PMNI",
+    "pm_si": "FP32_PMSI",
+    "pm_ci": "FP32_PMCI",
+    "pm_csi": "FP32_PMCSI",
+    "nm_ni": "FP32_NMNI",
+    "nm_si": "FP32_NMSI",
+    "nm_ci": "FP32_NMCI",
+    "nm_csi": "FP32_NMCSI",
+}
+
+
+def _base_map() -> np.ndarray:
+    return np.full((N_STAGES, N_COLS), C.EXACT, dtype=np.int32)
+
+
+def scheme_map(variant: str) -> np.ndarray:
+    """Return the (3, 48) compressor-code map for a named variant."""
+    m = _base_map()
+    if variant == "exact":
+        return m
+    s = np.arange(N_STAGES)[:, None]
+    c = np.arange(N_COLS)[None, :]
+    approx = c < APPROX_COLS
+
+    pc, nc = C.PC1, C.NC1
+    if variant == "pm_ni":
+        fill = np.where(approx, pc, C.EXACT)
+    elif variant == "nm_ni":
+        fill = np.where(approx, nc, C.EXACT)
+    elif variant == "pm_si":
+        fill = np.where(approx, np.where(s % 2 == 0, pc, nc), C.EXACT)
+    elif variant == "nm_si":
+        fill = np.where(approx, np.where(s % 2 == 0, nc, pc), C.EXACT)
+    elif variant == "pm_ci":
+        fill = np.where(approx, np.where(c % 2 == 0, pc, nc), C.EXACT)
+    elif variant == "nm_ci":
+        fill = np.where(approx, np.where(c % 2 == 0, nc, pc), C.EXACT)
+    elif variant == "pm_csi":
+        fill = np.where(approx, np.where((s + c) % 2 == 0, pc, nc), C.EXACT)
+    elif variant == "nm_csi":
+        fill = np.where(approx, np.where((s + c) % 2 == 0, nc, pc), C.EXACT)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return np.broadcast_to(fill, (N_STAGES, N_COLS)).astype(np.int32)
+
+
+def scheme_stack() -> np.ndarray:
+    """(9, 3, 48) stack of all variant maps, indexed by variant id."""
+    return np.stack([scheme_map(v) for v in VARIANTS], axis=0)

@@ -1,0 +1,259 @@
+"""Paper Sec. III experiments: uniform-AM CNN, NSGA-II interleaving, displacement.
+
+Reproduces, on the procedural CIFAR-10 stand-in (data/cifar_like.py):
+
+  * Fig. 2(a): each of the 8 FP32 AMs applied uniformly across both conv
+    layers — inference accuracy + cumulative multiplier PDP;
+  * Fig. 4 / Fig. 2(b): NSGA-II over 198-slot sequences for K = 2..8,
+    objectives (area, PDP, accuracy-loss); knee-point selection;
+  * Fig. 5: 10 random displacements of each selected sequence (positional
+    robustness — the paper's double approximation);
+  * bit-exact spot validation of the selected sequences (the surrogate is the
+    inner-loop numerics; the bit-level emulator is the ground truth).
+
+Results are persisted as JSON under artifacts/ so benchmarks can re-render
+tables without re-running the (hour-scale) optimization.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core import hwmodel, interleave, nsga2, schemes
+from repro.data import cifar_like
+from repro.models import cnn
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts"
+PARAMS_FILE = ARTIFACTS / "paper_cnn_params.npz"
+
+# The paper's hardware accounting: per-multiplier metrics scale by the slot
+# count; conv slots here = 198 (22 filters x 9 coefficients).
+N_SLOTS = cnn.N_SLOTS
+
+
+def load_params():
+    d = np.load(PARAMS_FILE)
+    return {k: jax.numpy.asarray(v) for k, v in d.items()}
+
+
+def train_params(steps: int = 3000, batch: int = 64, seed: int = 0, save: bool = True):
+    params = cnn.init_params(jax.random.PRNGKey(seed))
+    it = cifar_like.iterate("train", batch, steps)
+    params = cnn.train(params, it, steps, log_every=max(1, steps // 10))
+    if save:
+        ARTIFACTS.mkdir(exist_ok=True)
+        np.savez(PARAMS_FILE, **{k: np.asarray(v) for k, v in params.items()})
+    return params
+
+
+def _slot_maps(seq: np.ndarray):
+    return cnn.slot_maps_from_sequence(np.asarray(seq, np.int32))
+
+
+def eval_accuracy(
+    params,
+    seq: np.ndarray | None,
+    n_images: int = 2000,
+    *,
+    numerics: str = "surrogate",
+    key=None,
+    noise_scale: float = 1.0,
+):
+    """CNN inference accuracy under a 198-slot sequence (None = exact)."""
+    x, y = cifar_like.make_batch("test", 0, n_images)
+    if seq is None:
+        return cnn.accuracy(params, x, y, numerics="exact")
+    maps = _slot_maps(seq)
+    if numerics == "surrogate":
+        k = key if key is not None else jax.random.PRNGKey(0)
+        if noise_scale != 1.0:
+            num = ("surrogate_scaled", maps, k, noise_scale)
+        else:
+            num = ("surrogate", maps, k)
+        return cnn.accuracy(params, x, y, numerics=num, key=key)
+    return cnn.accuracy(params, x, y, numerics=("bitexact", maps))
+
+
+def make_fast_evaluator(params, n_images: int, noise_scale: float = 1.0):
+    """Jit-compiled surrogate CNN accuracy with *traced* slot maps.
+
+    Compiles once; each genome evaluation is then a fast device call. This is
+    the NSGA-II inner-loop evaluator (cnn.accuracy would recompile per genome
+    because slot maps enter as constants).
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import ref as kref
+
+    x_np, y_np = cifar_like.make_batch("test", 0, n_images)
+    x, y = jnp.asarray(x_np), jnp.asarray(y_np)
+
+    @jax.jit
+    def n_correct(map1, map2, key):
+        k1, k2 = jax.random.split(key)
+        h = kref.am_conv2d_surrogate_ref(
+            x, params["conv1_w"], map1, k1, noise_scale
+        ) + params["conv1_b"]
+        h = cnn._maxpool2(jax.nn.relu(h))
+        h = kref.am_conv2d_surrogate_ref(
+            h, params["conv2_w"], map2, k2, noise_scale
+        ) + params["conv2_b"]
+        h = cnn._maxpool2(jax.nn.relu(h))
+        logits = cnn._head(params, h)
+        return jnp.sum(jnp.argmax(logits, -1) == y)
+
+    def evaluate(seq: np.ndarray, key) -> float:
+        m1, m2 = _slot_maps(seq)
+        return float(n_correct(jnp.asarray(m1), jnp.asarray(m2), key)) / n_images
+
+    return evaluate
+
+
+def uniform_study(params, n_images: int = 2000, noise_scale: float = 1.0):
+    """Fig. 2(a): accuracy + PDP of each AM deployed uniformly."""
+    rows = {}
+    acc_exact = eval_accuracy(params, None, n_images)
+    rows["exact"] = {
+        "accuracy": acc_exact,
+        **hwmodel.sequence_cost(interleave.uniform_sequence("exact", N_SLOTS)),
+    }
+    evaluator = make_fast_evaluator(params, n_images, noise_scale)
+    for v in schemes.AM_VARIANTS:
+        seq = interleave.uniform_sequence(v, N_SLOTS)
+        acc = evaluator(seq, jax.random.PRNGKey(schemes.VARIANT_IDS[v]))
+        rows[v] = {"accuracy": acc, **hwmodel.sequence_cost(seq)}
+    return rows
+
+
+def accuracy_ranking(uniform_rows: dict) -> list[str]:
+    """AM variants ranked by uniform-deployment accuracy (paper's ranking)."""
+    ams = [(v, r["accuracy"]) for v, r in uniform_rows.items() if v != "exact"]
+    return [v for v, _ in sorted(ams, key=lambda t: -t[1])]
+
+
+def nsga_study(
+    params,
+    k: int,
+    *,
+    ranking: list[str] | None = None,
+    n_images: int = 512,
+    pop_size: int = 24,
+    generations: int = 15,
+    seed: int = 0,
+    noise_scale: float = 1.0,
+    log=print,
+):
+    """NSGA-II over 198-slot sequences with a K-variant alphabet.
+
+    Objectives (minimized, paper Sec. III-A): distinct-type area, total PDP,
+    accuracy loss (1 - acc) on an inner-loop image subset.
+    """
+    if ranking is None:
+        alphabet = interleave.alphabet_for_k(k)
+    else:
+        alphabet = [schemes.VARIANT_IDS[v] for v in ranking[:k]]
+
+    eval_key = jax.random.PRNGKey(seed + 1000)
+    n_evals = [0]
+    evaluator = make_fast_evaluator(params, n_images, noise_scale)
+
+    def objectives(genome: np.ndarray) -> np.ndarray:
+        cost = hwmodel.sequence_cost(genome)
+        key = jax.random.fold_in(eval_key, n_evals[0])
+        n_evals[0] += 1
+        acc = evaluator(genome, key)
+        return np.array([cost["area_um2"], cost["pdp_pj"], 1.0 - acc])
+
+    t0 = time.time()
+    front = nsga2.optimize(
+        objectives,
+        genome_len=N_SLOTS,
+        alphabet=alphabet,
+        pop_size=pop_size,
+        generations=generations,
+        seed=seed,
+        log=(lambda s: log(f"  [K={k}] {s}")) if log else None,
+    )
+    knee = nsga2.knee_point(front)
+    return {
+        "k": k,
+        "alphabet": list(map(int, alphabet)),
+        "front": [
+            {"objectives": ind.objectives.tolist(), "genome": ind.genome.tolist()}
+            for ind in front
+        ],
+        "knee_genome": knee.genome.tolist(),
+        "knee_objectives": knee.objectives.tolist(),
+        "evals": n_evals[0],
+        "seconds": time.time() - t0,
+    }
+
+
+def displacement_study(
+    params,
+    seq: np.ndarray,
+    *,
+    n_perms: int = 10,
+    n_images: int = 2000,
+    seed: int = 0,
+    noise_scale: float = 1.0,
+):
+    """Fig. 5: random slot permutations of an optimized sequence."""
+    rng = np.random.default_rng(seed)
+    evaluator = make_fast_evaluator(params, n_images, noise_scale)
+    accs = []
+    for i in range(n_perms):
+        perm = interleave.random_displacement(np.asarray(seq, np.int32), rng)
+        accs.append(evaluator(perm, jax.random.PRNGKey(7000 + i)))
+    return {"accuracies": accs, "max": max(accs), "mean": float(np.mean(accs))}
+
+
+def run_all(
+    *,
+    ks=(2, 3, 4, 5, 8),
+    n_images_rank: int = 2000,
+    n_images_inner: int = 512,
+    pop_size: int = 24,
+    generations: int = 15,
+    noise_scale: float = 1.0,
+    out_name: str = "paper_cnn_results.json",
+    log=print,
+):
+    """Full paper Sec. III pipeline; writes artifacts/<out_name>."""
+    params = load_params()
+    log("== uniform study (Fig 2a) ==")
+    uni = uniform_study(params, n_images_rank, noise_scale=noise_scale)
+    ranking = accuracy_ranking(uni)
+    for v in ["exact"] + ranking:
+        r = uni[v]
+        log(f"  {v:8s} acc={r['accuracy']:.4f} pdp={r['pdp_pj']:.1f}pJ "
+            f"benefit={r['pdp_benefit_pct']:.2f}%")
+
+    results = {"uniform": uni, "ranking": ranking, "noise_scale": noise_scale,
+               "nsga": {}, "displacement": {}}
+    for k in ks:
+        log(f"== NSGA-II K={k} ==")
+        res = nsga_study(
+            params, k, ranking=ranking, n_images=n_images_inner,
+            pop_size=pop_size, generations=generations, noise_scale=noise_scale,
+            log=log,
+        )
+        results["nsga"][str(k)] = res
+        log(f"== displacement K={k} ==")
+        disp = displacement_study(
+            params, np.asarray(res["knee_genome"], np.int32),
+            n_images=n_images_rank, noise_scale=noise_scale,
+        )
+        results["displacement"][str(k)] = disp
+        log(f"  K={k} knee acc={1 - res['knee_objectives'][2]:.4f} "
+            f"displaced max={disp['max']:.4f} mean={disp['mean']:.4f}")
+
+    ARTIFACTS.mkdir(exist_ok=True)
+    out = ARTIFACTS / out_name
+    out.write_text(json.dumps(results, indent=1))
+    log(f"wrote {out}")
+    return results

@@ -1,0 +1,79 @@
+"""Fused statistical-AM matmul Pallas kernel (the LM-scale hot spot).
+
+The surrogate numerics (core/surrogate.py) needs two matmuls over the same
+operands: ``mean = x @ (w(1+mu))`` and ``var = x^2 @ (w^2 sg^2)``. Composed
+naively that is 2 HBM reads of x and w plus two materialized weight transforms.
+This kernel fuses both contractions in one pass over (M/bm, N/bn, K/bk) tiles:
+each (x, w, mu, sg) tile is read once into VMEM, the weight transforms are
+computed in-register, and both accumulations hit the MXU back-to-back.
+
+HBM traffic: 1x x + 1x w + mu/sg tiles (vs 2x x + 2x w + transformed weights);
+FLOPs unchanged (2 MXU matmuls — the cost of the technique itself).
+
+VMEM budget per program (f32): x bm*bk + w/mu/sg 3*bk*bn + 2 acc bm*bn.
+Default (bm, bk, bn) = (128, 128, 128): (1 + 3 + 2) * 64 KiB = 384 KiB, well
+under the ~16 MiB/core VMEM of TPU v5e; MXU dims are 128-aligned.
+
+Noise injection stays outside (one elementwise op) so the kernel is
+deterministic and oracle-comparable; see ops.am_surrogate_matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (128, 128, 128)  # (bm, bk, bn)
+
+
+def _kernel(x_ref, w_ref, mu_ref, sg_ref, mean_ref, var_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        mean_ref[...] = jnp.zeros_like(mean_ref)
+        var_ref[...] = jnp.zeros_like(var_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    mu = mu_ref[...]
+    sg = sg_ref[...]
+
+    w_mean = w * (1.0 + mu)
+    w_var = (w * w) * (sg * sg)
+    mean_ref[...] += jax.lax.dot(x, w_mean, preferred_element_type=jnp.float32)
+    var_ref[...] += jax.lax.dot(x * x, w_var, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def am_surrogate_matmul_kernel(x, w, mu, sg, *, block=DEFAULT_BLOCK, interpret=True):
+    """Fused (mean, var) AM matmul.
+
+    x: (M, K); w, mu, sg: (K, N). M, K, N must divide by the block shape.
+    Returns (mean, var), both (M, N) f32.
+    """
+    m, k = x.shape
+    n = w.shape[1]
+    bm, bk, bn = block
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (x.shape, w.shape, block)
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, mu, sg)

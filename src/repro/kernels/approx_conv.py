@@ -1,0 +1,83 @@
+"""Bit-exact interleaved conv2d Pallas kernel (the paper's CNN compute).
+
+NHWC, VALID, stride 1. Each (filter, ky, kx) tap carries its own multiplier
+variant (slot map shared across input channels, exactly the paper's 198-slot
+scheme for the 22x3x3 CNN). The kernel tiles the batch dimension; within a
+program the 3x3 taps are unrolled (static Python loop — 9 steps) and each tap
+does an emulated-AM multiply of the (bh, ho, wo, Cin) patch against the
+(F, Cin) tap weights, vectorized over filters.
+
+VMEM sizing (paper CNN, bh=1): patch bits tensor is
+(ho*wo, Cin, F, 10, 48) int32 <= (900, 3, 12, 480)*4 B = 58 MiB — too big in
+one shot, so the tap loop additionally chunks filters in groups of FG=4:
+(900, 3, 4, 480)*4 = 6.6 MiB per chunk, fitting VMEM. Grid iterates taps
+sequentially so only one chunk is live at a time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import fp32_mul, schemes
+
+FILTER_GROUP = 4
+
+
+def _make_kernel(kh: int, kw: int, f_total: int):
+    def _kernel(x_ref, w_ref, vid_ref, stack_ref, o_ref):
+        x = x_ref[...]  # (bh, H, W, Cin)
+        w = w_ref[...]  # (F, kh, kw, Cin)
+        vids = vid_ref[...]  # (F, kh, kw)
+        stack = stack_ref[...]  # (9, 3, 48)
+        bh, h, wd, cin = x.shape
+        ho, wo = h - kh + 1, wd - kw + 1
+
+        # Filter-group outer loop + concatenate keeps the kernel scatter-free
+        # (``.at[].add`` lowers to gather/scatter constants Pallas rejects).
+        groups = []
+        for f0 in range(0, f_total, FILTER_GROUP):
+            f1 = min(f0 + FILTER_GROUP, f_total)
+            acc = jnp.zeros((bh, ho, wo, f1 - f0), jnp.float32)
+            for ky in range(kh):
+                for kx in range(kw):
+                    patch = x[:, ky : ky + ho, kx : kx + wo, :]
+                    wf = w[f0:f1, ky, kx, :]  # (fg, Cin)
+                    vid = vids[f0:f1, ky, kx]  # (fg,)
+                    prods = fp32_mul.fp32_multiply_interleaved(
+                        patch[..., None, :],  # (bh,ho,wo,1,Cin)
+                        wf[None, None, None, :, :],
+                        vid[None, None, None, :, None],
+                        scheme_stack=stack,
+                    )  # (bh,ho,wo,fg,Cin)
+                    acc = acc + jnp.sum(prods, axis=-1)
+            groups.append(acc)
+        o_ref[...] = groups[0] if len(groups) == 1 else jnp.concatenate(groups, axis=-1)
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("batch_block", "interpret"))
+def am_conv2d_bitexact_kernel(x, w, slot_map, *, batch_block=1, interpret=True):
+    """x (B,H,W,Cin) f32, w (F,kh,kw,Cin) f32, slot_map (F,kh,kw) int32."""
+    b, h, wd, cin = x.shape
+    f, kh, kw, _ = w.shape
+    ho, wo = h - kh + 1, wd - kw + 1
+    assert b % batch_block == 0
+
+    stack = jnp.asarray(schemes.scheme_stack(), jnp.int32)
+    return pl.pallas_call(
+        _make_kernel(kh, kw, f),
+        grid=(b // batch_block,),
+        in_specs=[
+            pl.BlockSpec((batch_block, h, wd, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((f, kh, kw, cin), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((f, kh, kw), lambda i: (0, 0, 0)),
+            pl.BlockSpec(stack.shape, lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch_block, ho, wo, f), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, f), jnp.float32),
+        interpret=interpret,
+    )(x, w, jnp.asarray(slot_map, jnp.int32), stack)

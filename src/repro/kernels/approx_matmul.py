@@ -1,0 +1,76 @@
+"""Bit-exact approximate-multiplier matmul Pallas kernel.
+
+Each scalar product x[m,k] * w[k,n] is computed through the emulated
+approximate FP32 multiplier of the slot's variant (per-(k,n) variant map —
+the paper's interleaving at matmul granularity); accumulation is exact f32.
+
+This is the fidelity kernel: the bit-level Booth + compressor-tree emulation
+(core/fp32_mul.py) is traced *inside* the kernel body on VMEM tiles. It exists
+to run the paper's numerics on-device at CNN scale, not to win FLOPs — the
+emulation is integer-op bound (~10^2 VPU ops per multiply). Blocks are chosen
+so the bit-matrix intermediates fit VMEM:
+
+  per program, the dominant temporary is the PPM bit tensor
+  (bm, bk, bn, 10, 48) int32 -> with (bm, bk, bn) = (8, 16, 16) that is
+  8*16*16*480*4 B = 3.75 MiB, within the v5e VMEM envelope.
+
+Validated in interpret mode against kernels/ref.py::am_matmul_bitexact_ref
+(bit equality).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import fp32_mul, schemes
+
+DEFAULT_BLOCK = (8, 16, 16)  # (bm, bk, bn) — sized by the VMEM math above
+
+
+def _kernel(x_ref, w_ref, vid_ref, stack_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (bm, bk)
+    w = w_ref[...]  # (bk, bn)
+    vids = vid_ref[...]  # (bk, bn)
+    stack = stack_ref[...]  # (9, 3, 48)
+    bm, bk = x.shape
+    bn = w.shape[1]
+
+    prods = fp32_mul.fp32_multiply_interleaved(
+        jnp.broadcast_to(x[:, :, None], (bm, bk, bn)),
+        jnp.broadcast_to(w[None, :, :], (bm, bk, bn)),
+        vids[None, :, :],
+        scheme_stack=stack,
+    )
+    o_ref[...] += jnp.sum(prods, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def am_matmul_bitexact_kernel(x, w, variant_ids, *, block=DEFAULT_BLOCK, interpret=True):
+    """x (M,K) f32 @ w (K,N) f32 under per-(K,N) variant ids (int32)."""
+    m, k = x.shape
+    n = w.shape[1]
+    bm, bk, bn = block
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (x.shape, w.shape, block)
+
+    grid = (m // bm, n // bn, k // bk)
+    stack = jnp.asarray(schemes.scheme_stack(), jnp.int32)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec(stack.shape, lambda i, j, kk: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, jnp.asarray(variant_ids, jnp.int32), stack)

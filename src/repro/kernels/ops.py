@@ -1,0 +1,73 @@
+"""Public jit'd wrappers over the Pallas kernels with padding + impl dispatch.
+
+`impl="kernel"` runs the Pallas kernel (interpret=True on CPU, compiled on
+TPU); `impl="ref"` runs the pure-jnp oracle. Shapes are padded to block
+multiples and cropped back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import am_surrogate_matmul as _sgk
+from repro.kernels import approx_conv as _convk
+from repro.kernels import approx_matmul as _mmk
+from repro.kernels import ref as _ref
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mults, axes):
+    pads = [(0, 0)] * x.ndim
+    for ax, mlt in zip(axes, mults):
+        rem = (-x.shape[ax]) % mlt
+        pads[ax] = (0, rem)
+    if any(p != (0, 0) for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def am_surrogate_matmul(x, w, mu, sg, key, *, block=_sgk.DEFAULT_BLOCK, impl="kernel"):
+    """Noise-complete statistical AM matmul: mean + z*sqrt(var)."""
+    m, k = x.shape
+    n = w.shape[1]
+    if impl == "ref":
+        mean, var = _ref.am_surrogate_matmul_ref(x, w, mu, sg)
+    else:
+        bm, bk, bn = block
+        xp = _pad_to(x, (bm, bk), (0, 1))
+        wp = _pad_to(w, (bk, bn), (0, 1))
+        mup = _pad_to(mu, (bk, bn), (0, 1))
+        sgp = _pad_to(sg, (bk, bn), (0, 1))
+        mean, var = _sgk.am_surrogate_matmul_kernel(
+            xp, wp, mup, sgp, block=block, interpret=not _ON_TPU
+        )
+        mean, var = mean[:m, :n], var[:m, :n]
+    z = jax.random.normal(key, mean.shape, mean.dtype)
+    return mean + z * jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def am_matmul_bitexact(x, w, variant_ids, *, block=_mmk.DEFAULT_BLOCK, impl="kernel"):
+    """Bit-exact interleaved AM matmul."""
+    if impl == "ref":
+        return _ref.am_matmul_bitexact_ref(x, w, variant_ids)
+    m, k = x.shape
+    n = w.shape[1]
+    bm, bk, bn = block
+    xp = _pad_to(x, (bm, bk), (0, 1))
+    wp = _pad_to(w, (bk, bn), (0, 1))
+    vp = _pad_to(jnp.asarray(variant_ids, jnp.int32), (bk, bn), (0, 1))
+    out = _mmk.am_matmul_bitexact_kernel(
+        xp, wp, vp, block=block, interpret=not _ON_TPU
+    )
+    return out[:m, :n]
+
+
+def am_conv2d_bitexact(x, w, slot_map, *, impl="kernel", batch_block=1):
+    """Bit-exact interleaved conv2d (NHWC, VALID, stride 1)."""
+    if impl == "ref":
+        return _ref.am_conv2d_bitexact_ref(x, w, slot_map)
+    return _convk.am_conv2d_bitexact_kernel(
+        x, w, slot_map, batch_block=batch_block, interpret=not _ON_TPU
+    )

@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels must match (tests sweep shapes/dtypes
+and assert_allclose / bit-equality). They are also the implementations used by
+the heavy paper experiments (jit-compiled, vectorized) — the Pallas kernels
+target TPU and are validated here in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fp32_mul
+
+
+def am_surrogate_matmul_ref(x, w, mu, sigma):
+    """Mean/variance pair of the statistical AM matmul (no noise draw).
+
+    x: (M, K) f32;  w, mu, sigma: (K, N) f32.
+    Returns (mean (M,N), var (M,N)).
+    """
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    mean = xf @ (wf * (1.0 + mu))
+    var = (xf * xf) @ ((wf * wf) * (sigma * sigma))
+    return mean, var
+
+
+def am_matmul_bitexact_ref(x, w, variant_ids, chunk_m: int = 8, chunk_k: int | None = None):
+    """Bit-exact AM matmul oracle.
+
+    x: (M, K) f32; w: (K, N) f32; variant_ids: (K, N) int32 per-slot variants.
+    Every scalar product uses the slot's multiplier; accumulation is exact f32
+    (the paper approximates multipliers only; adders stay exact).
+
+    ``chunk_k`` reproduces the Pallas kernel's blocked-k accumulation order
+    (sum within each k block, then add blocks sequentially), so kernel-vs-ref
+    comparisons are bit-identical rather than merely allclose.
+    """
+    m, k = x.shape
+    n = w.shape[1]
+    vids = jnp.asarray(variant_ids, jnp.int32)
+    ck = chunk_k or k
+
+    def block(xb):
+        acc = jnp.zeros((xb.shape[0], n), jnp.float32)
+        for k0 in range(0, k, ck):
+            k1 = min(k0 + ck, k)
+            prods = fp32_mul.fp32_multiply_interleaved(
+                jnp.broadcast_to(xb[:, k0:k1, None], (xb.shape[0], k1 - k0, n)),
+                jnp.broadcast_to(w[None, k0:k1, :], (xb.shape[0], k1 - k0, n)),
+                vids[None, k0:k1, :],
+            )
+            acc = acc + jnp.sum(prods, axis=1)
+        return acc
+
+    outs = [block(x[i : i + chunk_m]) for i in range(0, m, chunk_m)]
+    return jnp.concatenate(outs, axis=0)
+
+
+def am_conv2d_bitexact_ref(x, w, slot_map):
+    """Bit-exact interleaved conv2d oracle (NHWC, VALID, stride 1).
+
+    x: (B, H, W, Cin) f32; w: (F, kh, kw, Cin) f32;
+    slot_map: (F, kh, kw) int32 — the paper's per-(filter, coefficient)
+    multiplier assignment, shared across input channels.
+    Returns (B, H-kh+1, W-kw+1, F) f32.
+    """
+    b, h, wd, cin = x.shape
+    f, kh, kw, _ = w.shape
+    ho, wo = h - kh + 1, wd - kw + 1
+    slot = jnp.asarray(slot_map, jnp.int32)
+
+    acc = jnp.zeros((b, ho, wo, f), jnp.float32)
+    for ky in range(kh):
+        for kx in range(kw):
+            patch = x[:, ky : ky + ho, kx : kx + wo, :]  # (B,ho,wo,Cin)
+            wf = w[:, ky, kx, :]  # (F, Cin)
+            vid = slot[:, ky, kx]  # (F,)
+            prods = fp32_mul.fp32_multiply_interleaved(
+                patch[..., None, :],  # (B,ho,wo,1,Cin)
+                wf[None, None, None, :, :],  # (1,1,1,F,Cin)
+                vid[None, None, None, :, None],
+            )  # (B,ho,wo,F,Cin)
+            acc = acc + jnp.sum(prods, axis=-1)
+    return acc
+
+
+def conv2d_exact_ref(x, w):
+    """Plain f32 conv2d (NHWC, VALID, stride 1) for baselines."""
+    return jax.lax.conv_general_dilated(
+        x,
+        jnp.transpose(w, (1, 2, 3, 0)),  # (kh,kw,Cin,F)
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def am_conv2d_surrogate_ref(x, w, slot_map, key, noise_scale: float = 1.0):
+    """Surrogate interleaved conv2d: per-slot moments folded into the taps.
+
+    Matches the statistical model of core/surrogate.py at conv granularity:
+    each (f, ky, kx) tap's products get (1 + mu_v) mean scaling and additive
+    variance (x^2 conv (w^2 sigma^2)). ``noise_scale`` amplifies both moments
+    for the error-magnitude ablation (1.0 = paper-faithful calibration).
+    """
+    from repro.core import surrogate
+
+    mu_t, sg_t = surrogate.moment_tables()
+    mu_t, sg_t = mu_t * noise_scale, sg_t * noise_scale
+    slot = jnp.asarray(slot_map)  # may be traced (fast NSGA-II inner loop)
+    mu = jnp.asarray(mu_t)[slot][None, :, :, :]  # (1,F,kh,kw) -> align below
+    sg = jnp.asarray(sg_t)[slot][None, :, :, :]
+    # w: (F,kh,kw,Cin); broadcast moments over Cin.
+    w_mu = w * (1.0 + jnp.transpose(mu, (1, 2, 3, 0)))
+    w_sg2 = (w * w) * jnp.transpose(sg * sg, (1, 2, 3, 0))
+    mean = conv2d_exact_ref(x, w_mu)
+    var = conv2d_exact_ref(x * x, w_sg2)
+    z = jax.random.normal(key, mean.shape, mean.dtype)
+    return mean + z * jnp.sqrt(jnp.maximum(var, 0.0))

@@ -1,0 +1,36 @@
+"""Production mesh construction (TPU v5e pods; host-device placeholders on CPU).
+
+Defined as functions so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before first jax init, smoke tests see
+the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(n // data, 1))
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+def mesh_info(mesh) -> dict:
+    return {
+        "axes": dict(mesh.shape),
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+    }

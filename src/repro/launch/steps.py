@@ -1,0 +1,160 @@
+"""Jittable step functions + their sharding specs (shared by dryrun/train/serve).
+
+`build_train_step(cfg, opt_cfg)` returns (fn, in_specs, out_specs) where fn is
+jit-ready: microbatched gradient accumulation (lax.scan), optional int8
+gradient compression with error feedback, AdamW/ZeRO-1 update.
+
+`build_decode_step(cfg)` returns the one-token serve step operating on the
+sharded KV cache (greedy next token; the serving loop samples outside).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import registry as R
+from repro.optim import adamw, grad_compress, schedules
+from repro.parallel import sharding as shd
+
+
+def batch_specs(cfg, shape_name: str, mesh, rules: shd.ShardingRules = shd.DEFAULT):
+    """PartitionSpecs for the input batch of one cell."""
+    specs = R.input_specs(cfg, shape_name)
+
+    def spec_for(path_shape):
+        # dim 0 is always the (global) batch; everything else unsharded except
+        # audio frames / patches which keep feature dims replicated too.
+        nd = len(path_shape.shape)
+        return rules.spec(("batch",) + (None,) * (nd - 1), path_shape.shape, mesh)
+
+    return jax.tree.map(spec_for, specs)
+
+
+def _microbatch(tree, mb: int):
+    return jax.tree.map(
+        lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), tree)
+
+
+def build_train_step(cfg, opt_cfg: adamw.AdamWConfig, *, total_steps: int = 10_000,
+                     compress: bool = False, param_specs=None):
+    loss_fn = R.loss_fn(cfg)
+    mb = cfg.microbatches
+
+    def constrain(tree):
+        # Pin (accumulated) grads to the param sharding: without this XLA
+        # materialized REPLICATED wgrads inside the microbatch scan (16x
+        # FLOPs + memory on the TP'd weights; §Perf iteration 5).
+        if param_specs is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, param_specs)
+
+    def train_step(params, opt_state, batch, error_buf=None):
+        def loss_for(p, b):
+            return loss_fn(p, b, cfg)
+
+        if mb > 1:
+            batches = _microbatch(batch, mb)
+            g0 = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+            def body(carry, mbatch):
+                lsum, gacc = carry
+                l, g = jax.value_and_grad(loss_for)(params, mbatch)
+                g = constrain(g)
+                gacc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), gacc, g)
+                return (lsum + l, gacc), None
+
+            (loss, grads), _ = jax.lax.scan(body, (0.0, g0), batches)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_for)(params, batch)
+
+        if compress:
+            grads, error_buf = grad_compress.compress_grads(grads, error_buf)
+
+        lr = schedules.warmup_cosine(
+            opt_state["step"] + 1, peak_lr=opt_cfg.lr, warmup=min(500, total_steps // 10),
+            total=total_steps)
+        new_params, new_state = adamw.update(
+            grads, opt_state, opt_cfg, cfg.jnp_dtype, lr=lr)
+        metrics = {"loss": loss, "grad_norm": adamw.global_norm(grads), "lr": lr}
+        if compress:
+            return new_params, new_state, error_buf, metrics
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def train_step_shardings(cfg, shape_name: str, mesh, opt_cfg, *, compress=False,
+                         rules: shd.ShardingRules = shd.DEFAULT):
+    """(in_shardings, out_shardings, abstract args) for jit + lower."""
+    aparams = R.abstract_params(cfg)
+    pspecs = R.param_specs(cfg, mesh, rules)
+    astate = adamw.abstract_init(aparams, opt_cfg)
+    sspecs = adamw.state_specs(pspecs, aparams, mesh, opt_cfg)
+    bspecs = batch_specs(cfg, shape_name, mesh, rules)
+    ainputs = R.input_specs(cfg, shape_name)
+
+    metrics_spec = {"loss": P(), "grad_norm": P(), "lr": P()}
+    in_specs = (pspecs, sspecs, bspecs["batch"])
+    out_specs = (pspecs, sspecs, metrics_spec)
+    args = (aparams, astate, ainputs["batch"])
+    if compress:
+        ebuf = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), aparams)
+        in_specs = in_specs + (pspecs,)
+        out_specs = (pspecs, sspecs, pspecs, metrics_spec)
+        args = args + (ebuf,)
+    return in_specs, out_specs, args
+
+
+def build_prefill_step(cfg):
+    fwd = R.forward_fn(cfg)
+
+    def prefill(params, batch):
+        logits = fwd(params, batch, cfg)
+        # Serving returns only the last-position logits (next-token scores).
+        return logits[:, -1, :]
+
+    return prefill
+
+
+def prefill_shardings(cfg, shape_name: str, mesh, rules: shd.ShardingRules = shd.DEFAULT):
+    aparams = R.abstract_params(cfg)
+    pspecs = R.param_specs(cfg, mesh, rules)
+    bspecs = batch_specs(cfg, shape_name, mesh, rules)
+    ainputs = R.input_specs(cfg, shape_name)
+    out_spec = rules.spec(("batch", "vocab"),
+                          (R.SHAPES[shape_name]["batch"], cfg.vocab), mesh)
+    return (pspecs, bspecs["batch"]), out_spec, (aparams, ainputs["batch"])
+
+
+def build_decode_step(cfg):
+    dec = R.decode_fn(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = dec(params, cache, tokens, pos, cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return serve_step
+
+
+def decode_shardings(cfg, shape_name: str, mesh, rules: shd.ShardingRules = shd.DEFAULT):
+    sh = R.SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    aparams = R.abstract_params(cfg)
+    pspecs = R.param_specs(cfg, mesh, rules)
+    cspecs = R.cache_specs(cfg, b, s, mesh, rules)
+    ainputs = R.input_specs(cfg, shape_name)
+    tok_spec = rules.spec(("batch",), (b,), mesh)
+    logits_spec = rules.spec(("batch", "vocab"), (b, cfg.vocab), mesh)
+    in_specs = (pspecs, cspecs, tok_spec, P())
+    out_specs = (tok_spec, logits_spec, cspecs)
+    args = (aparams, ainputs["cache"], ainputs["tokens"], ainputs["pos"])
+    return in_specs, out_specs, args

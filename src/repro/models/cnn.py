@@ -1,0 +1,153 @@
+"""The paper's custom CNN (Sec. III): two conv layers, 10 + 12 kernels of 3x3.
+
+Architecture: conv1(10 @ 3x3) -> relu -> maxpool 2x2 -> conv2(12 @ 3x3) ->
+relu -> maxpool 2x2 -> dense(10). The paper applies approximate multipliers
+only inside the convolutions ("exact multipliers used elsewhere"), which this
+module honors: the dense head is always exact.
+
+Inference numerics:
+  "exact"                      — lax.conv f32 (the paper's exact multiplier)
+  ("bitexact", slot_maps)      — bit-level AM emulation per (filter, ky, kx)
+                                 slot (kernels/ref.py oracle, jit-chunked)
+  ("surrogate", slot_maps, key)— calibrated statistical AM (fast; NSGA-II
+                                 inner loop)
+
+slot_maps = [map1 (10,3,3), map2 (12,3,3)] int32 variant ids — 198 slots, the
+paper's interleaving granularity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as kref
+
+LAYER_FILTERS = [10, 12]
+N_SLOTS = sum(f * 9 for f in LAYER_FILTERS)  # 198, paper Sec. III-A
+
+
+def init_params(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    he = jax.nn.initializers.he_normal()
+    return {
+        "conv1_w": he(k1, (10, 3, 3, 3), jnp.float32),  # (F,kh,kw,Cin)
+        "conv1_b": jnp.zeros((10,), jnp.float32),
+        "conv2_w": he(k2, (12, 3, 3, 10), jnp.float32),
+        "conv2_b": jnp.zeros((12,), jnp.float32),
+        "dense_w": he(k3, (432, 10), jnp.float32),  # 6*6*12 -> 10
+        "dense_b": jnp.zeros((10,), jnp.float32),
+    }
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _head(params, h2):
+    flat = h2.reshape(h2.shape[0], -1)
+    return flat @ params["dense_w"] + params["dense_b"]
+
+
+def _conv(params, x, layer: int, numerics, keys):
+    w = params[f"conv{layer}_w"]
+    b = params[f"conv{layer}_b"]
+    if numerics == "exact" or numerics[0] == "exact":
+        y = kref.conv2d_exact_ref(x, w)
+    elif numerics[0] == "bitexact":
+        y = kref.am_conv2d_bitexact_ref(x, w, numerics[1][layer - 1])
+    elif numerics[0] == "surrogate":
+        y = kref.am_conv2d_surrogate_ref(x, w, numerics[1][layer - 1], keys[layer - 1])
+    elif numerics[0] == "surrogate_scaled":
+        y = kref.am_conv2d_surrogate_ref(
+            x, w, numerics[1][layer - 1], keys[layer - 1], noise_scale=numerics[3]
+        )
+    else:
+        raise ValueError(f"unknown numerics {numerics!r}")
+    return y + b
+
+
+def apply(params, x, numerics="exact", key=None):
+    """Forward pass. x: (B, 32, 32, 3) f32 in [0,1]. Returns (B, 10) logits."""
+    keys = (None, None)
+    if isinstance(numerics, tuple) and numerics[0].startswith("surrogate"):
+        keys = jax.random.split(numerics[2] if len(numerics) > 2 else key, 2)
+    h = _conv(params, x, 1, numerics, keys)
+    h = _maxpool2(jax.nn.relu(h))
+    h = _conv(params, h, 2, numerics, keys)
+    h = _maxpool2(jax.nn.relu(h))
+    return _head(params, h)
+
+
+# --------------------------------------------------------------------------
+# Training (exact numerics, as in the paper)
+# --------------------------------------------------------------------------
+
+
+@jax.jit
+def _train_step(params, opt_m, opt_v, step, x, y, lr=1e-3):
+    def loss_fn(p):
+        logits = apply(p, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    step = step + 1
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt_m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt_v, grads)
+
+    def upd(p, m, v):
+        mh = m / (1 - b1**step)
+        vh = v / (1 - b2**step)
+        return p - lr * mh / (jnp.sqrt(vh) + eps)
+
+    return jax.tree.map(upd, params, new_m, new_v), new_m, new_v, step, loss
+
+
+def train(params, data_iter, steps: int, lr: float = 1e-3, log_every: int = 0):
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    step = jnp.zeros((), jnp.int32)
+    for i, (x, y) in zip(range(steps), data_iter):
+        params, m, v, step, loss = _train_step(
+            params, m, v, step, jnp.asarray(x), jnp.asarray(y), lr
+        )
+        if log_every and (i + 1) % log_every == 0:
+            print(f"  step {i+1}/{steps} loss {float(loss):.4f}")
+    return params
+
+
+def accuracy(params, x, y, numerics="exact", key=None, chunk: int = 8):
+    """Classification accuracy under the given numerics (chunked for memory)."""
+    n = x.shape[0]
+    correct = 0
+    if numerics == "exact" or (isinstance(numerics, tuple) and numerics[0] != "bitexact"):
+        chunk = max(chunk, 256)  # fast paths take large chunks
+
+    @jax.jit
+    def _pred(xb, k):
+        num = numerics
+        if isinstance(numerics, tuple) and numerics[0] == "surrogate":
+            num = (numerics[0], numerics[1], k)
+        elif isinstance(numerics, tuple) and numerics[0] == "surrogate_scaled":
+            num = (numerics[0], numerics[1], k, numerics[3])
+        return jnp.argmax(apply(params, xb, num), axis=-1)
+
+    base_key = key if key is not None else jax.random.PRNGKey(0)
+    for i in range(0, n, chunk):
+        k = jax.random.fold_in(base_key, i)
+        pred = _pred(jnp.asarray(x[i : i + chunk]), k)
+        correct += int(jnp.sum(pred == jnp.asarray(y[i : i + chunk])))
+    return correct / n
+
+
+def slot_maps_from_sequence(seq: np.ndarray):
+    """Flat 198-slot sequence -> [map1 (10,3,3), map2 (12,3,3)]."""
+    from repro.core import interleave
+
+    return interleave.conv_slot_map(seq, LAYER_FILTERS)

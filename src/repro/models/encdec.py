@@ -1,0 +1,233 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder: non-causal self-attention blocks over (precomputed) audio frame
+embeddings — the speech frontend is a stub per the assignment. Decoder:
+causal self-attention + cross-attention + FFN. Decode-time cache holds the
+rolling self-attention KV plus the *fixed* per-layer cross KV computed once
+from the encoder memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.amlinear import am_einsum
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel import sharding as shd
+
+
+def _enc_layer_defs(cfg):
+    return {
+        "ln1": L.ParamDef((cfg.d_model,), ("embed",), "zeros"),
+        "attn": L.attention_def(cfg),
+        "ln2": L.ParamDef((cfg.d_model,), ("embed",), "zeros"),
+        "ffn": L.mlp_def(cfg),
+    }
+
+
+def _dec_layer_defs(cfg):
+    return {
+        "ln1": L.ParamDef((cfg.d_model,), ("embed",), "zeros"),
+        "self_attn": L.attention_def(cfg),
+        "ln_x": L.ParamDef((cfg.d_model,), ("embed",), "zeros"),
+        "cross_attn": L.cross_attention_def(cfg),
+        "ln2": L.ParamDef((cfg.d_model,), ("embed",), "zeros"),
+        "ffn": L.mlp_def(cfg),
+    }
+
+
+def _stack_defs(cfg) -> dict:
+    def stack_n(defs, n):
+        return jax.tree.map(
+            lambda d: L.ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init),
+            defs, is_leaf=T.is_def,
+        )
+
+    return {
+        "embed": L.ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+        "head": L.ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+        "enc_blocks": stack_n(_enc_layer_defs(cfg), cfg.n_enc_layers),
+        "enc_norm": L.ParamDef((cfg.d_model,), ("embed",), "zeros"),
+        "dec_blocks": stack_n(_dec_layer_defs(cfg), cfg.n_layers),
+        "norm_f": L.ParamDef((cfg.d_model,), ("embed",), "zeros"),
+    }
+
+
+def init_params(cfg, key):
+    defs = _stack_defs(cfg)
+    flat, treedef = jax.tree.flatten(defs, is_leaf=T.is_def)
+    keys = jax.random.split(key, len(flat))
+    vals = [d.initialize(k, cfg.jnp_dtype) for d, k in zip(flat, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(cfg):
+    defs = _stack_defs(cfg)
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, cfg.jnp_dtype), defs,
+        is_leaf=T.is_def,
+    )
+
+
+def param_specs(cfg, mesh, rules: shd.ShardingRules = shd.DEFAULT):
+    defs = _stack_defs(cfg)
+    return jax.tree.map(
+        lambda d: rules.spec(d.axes, d.shape, mesh), defs, is_leaf=T.is_def
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frames, cfg, key=None):
+    """frames: (B, S_enc, d) stub embeddings -> encoder memory (B, S_enc, d)."""
+    x = shd.logical_constraint(frames.astype(cfg.jnp_dtype),
+                               ("batch", "seq", "embed"))
+
+    def body(carry, xs):
+        p, idx = xs
+        k = T._k(key, idx)
+        h = L.rms_norm(carry, p["ln1"])
+        q, kk, v = L._qkv(p["attn"], h, cfg, T._k(k, 0))
+        pos = jnp.arange(h.shape[1])
+        q = L.rope(q, pos, cfg.rope_theta)
+        kk = L.rope(kk, pos, cfg.rope_theta)
+        att = L.flash_attention(q, kk, v, causal=False)
+        h = am_einsum("bshk,hkd->bsd", att, p["attn"]["wo"], cfg=cfg.numerics,
+                      key=T._k(k, 1))
+        x1 = carry + h
+        h2 = L.rms_norm(x1, p["ln2"])
+        out = x1 + L.mlp(p["ffn"], h2, cfg, key=T._k(k, 2))
+        return shd.logical_constraint(out, ("batch", "seq", "embed")), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x,
+                        (params["enc_blocks"], jnp.arange(cfg.n_enc_layers)))
+    return L.rms_norm(x, params["enc_norm"])
+
+
+def decode_train(params, tokens, memory, cfg, key=None):
+    """Teacher-forced decoder: tokens (B, S_dec) -> logits (B, S_dec, V)."""
+    x = T.embed_tokens(params, tokens, cfg)
+
+    def body(carry, xs):
+        p, idx = xs
+        k = T._k(key, idx)
+        h = L.rms_norm(carry, p["ln1"])
+        sa = L.attention_train(p["self_attn"], h, cfg, "attn_full", key=T._k(k, 0))
+        x1 = carry + sa
+        hx = L.rms_norm(x1, p["ln_x"])
+        ca = L.cross_attention(p["cross_attn"], hx, memory, cfg, key=T._k(k, 1))
+        x2 = x1 + ca
+        h2 = L.rms_norm(x2, p["ln2"])
+        out = x2 + L.mlp(p["ffn"], h2, cfg, key=T._k(k, 2))
+        return shd.logical_constraint(out, ("batch", "seq", "embed")), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x,
+                        (params["dec_blocks"], jnp.arange(cfg.n_layers)))
+    h = L.rms_norm(x, params["norm_f"])
+    return T.lm_logits(params, h, cfg)
+
+
+def forward(params, batch, cfg, key=None):
+    memory = encode(params, batch["frames"], cfg, key=T._k(key, 1))
+    return decode_train(params, batch["tokens"], memory, cfg, key=T._k(key, 2))
+
+
+def loss_fn(params, batch, cfg, key=None):
+    logits = forward(params, batch, cfg, key=key).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (((lse - gold) * mask).sum() + 1e-4 * ((lse * mask) ** 2).sum()) / denom
+
+
+# ---------------------------------------------------------------------------
+# Decode cache + step
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, ctx: int, mem_len: int):
+    """Self-attn rolling cache + fixed cross-attn KV per decoder layer."""
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    dt = cfg.jnp_dtype
+    n = cfg.n_layers
+
+    def z(shape):
+        return jnp.zeros(shape, dt)
+
+    return {
+        "self_k": z((n, batch, ctx, kv, dh)),
+        "self_v": z((n, batch, ctx, kv, dh)),
+        "cross_k": z((n, batch, mem_len, kv, dh)),
+        "cross_v": z((n, batch, mem_len, kv, dh)),
+    }
+
+
+def abstract_cache(cfg, batch: int, ctx: int, mem_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, ctx, mem_len))
+
+
+def cache_logical_axes():
+    ax = ("layers", "batch", "seq_kv", "kv_heads", "head_dim")
+    return {"self_k": ax, "self_v": ax, "cross_k": ax, "cross_v": ax}
+
+
+def cache_specs(cfg, batch, ctx, mem_len, mesh, rules: shd.ShardingRules = shd.DEFAULT):
+    cache = abstract_cache(cfg, batch, ctx, mem_len)
+    axes = cache_logical_axes()
+    return {k: rules.spec(axes[k], cache[k].shape, mesh) for k in cache}
+
+
+def precompute_cross_cache(params, memory, cfg):
+    """Per-layer cross K/V from encoder memory (prefill-time)."""
+
+    def body(_, p):
+        k = am_einsum("bsd,dhk->bshk", memory, p["cross_attn"]["wk"], cfg=cfg.numerics)
+        v = am_einsum("bsd,dhk->bshk", memory, p["cross_attn"]["wv"], cfg=cfg.numerics)
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["dec_blocks"])
+    return ks, vs
+
+
+def decode_step(params, cache, tokens, pos, cfg, key=None):
+    """One decoder token across all layers. tokens (B,), pos scalar."""
+    x = T.embed_tokens(params, tokens[:, None], cfg)
+
+    def body(carry, xs):
+        p, sk, sv, ck, cv, idx = xs
+        k = T._k(key, idx)
+        h = L.rms_norm(carry, p["ln1"])
+        sa, new_c = L.attention_decode(
+            p["self_attn"], {"k": sk, "v": sv}, h, pos, cfg, "attn_full",
+            key=T._k(k, 0))
+        x1 = carry + sa
+        hx = L.rms_norm(x1, p["ln_x"])
+        # Cross attention against fixed memory KV.
+        q = am_einsum("bsd,dhk->bshk", hx, p["cross_attn"]["wq"], cfg=cfg.numerics,
+                      key=T._k(k, 1))
+        att = L.flash_attention(q, ck, cv, causal=False)
+        ca = am_einsum("bshk,hkd->bsd", att, p["cross_attn"]["wo"],
+                       cfg=cfg.numerics, key=T._k(k, 2))
+        x2 = x1 + ca
+        h2 = L.rms_norm(x2, p["ln2"])
+        out = x2 + L.mlp(p["ffn"], h2, cfg, key=T._k(k, 3))
+        return out, (new_c["k"], new_c["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x,
+        (params["dec_blocks"], cache["self_k"], cache["self_v"],
+         cache["cross_k"], cache["cross_v"], jnp.arange(cfg.n_layers)),
+    )
+    new_cache = dict(cache, self_k=nk, self_v=nv)
+    h = L.rms_norm(x, params["norm_f"])
+    logits = T.lm_logits(params, h, cfg)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,714 @@
+"""Model-zoo building blocks (pure JAX, GSPMD-sharded, AM-numerics aware).
+
+Every weight-bearing matmul routes through core.amlinear.am_einsum, so the
+paper's interleaved-approximate-multiplier numerics is a config switch for
+every architecture (DESIGN.md Sec. 2 "slot granularity").
+
+Parameter definition pattern: each block provides ``<block>_def(cfg) ->
+{name: ParamDef(shape, logical_axes, init)}``; transformer.py materializes
+init values and sharding specs from the same definition, so layout and
+initialization can never drift apart.
+
+Attention is computed with a streaming (flash-style) online-softmax scan over
+KV blocks — no (S, S) score matrix is ever materialized, which is what lets
+prefill_32k compile inside the v5e HBM envelope.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.amlinear import NumericsConfig, am_einsum
+from repro.parallel import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | rglru_a
+
+    def initialize(self, key, dtype):
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "rglru_a":
+            # Lambda parametrization: softplus(L) with a ~ U(0.9, 0.999)^c
+            u = jax.random.uniform(key, self.shape, jnp.float32, 0.9, 0.999)
+            lam = jnp.log(jnp.expm1(-(8.0 / 1.0) * jnp.log(u)))
+            return lam.astype(dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else max(self.shape[0], 1)
+        if len(self.shape) == 3:  # (E, d, f) expert weights: fan-in is dim 1
+            fan_in = self.shape[1]
+        scale = 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_tree(defs: dict, key, dtype):
+    leaves = sorted(defs.keys())
+    keys = jax.random.split(key, len(leaves))
+    return {n: defs[n].initialize(k, dtype) for n, k in zip(leaves, keys)}
+
+
+def axes_tree(defs: dict):
+    return {n: d.axes for n, d in defs.items()}
+
+
+def _nkey(key, i: int):
+    return None if key is None else jax.random.fold_in(key, i)
+
+
+# ---------------------------------------------------------------------------
+# Norms & RoPE
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    # f32 accumulation without materializing an f32 copy of x (the bf16->f32
+    # convert of (B,S,d) was the #2 memory-traffic op in the train_4k HLO).
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    scale = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * scale * (1.0 + w)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq  # (..., S, 1, half)
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, streaming softmax)
+# ---------------------------------------------------------------------------
+
+
+def attention_def(cfg) -> dict[str, ParamDef]:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    defs = {
+        "wq": ParamDef((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h, dh), ("heads", "head_dim"), "zeros")
+        defs["bk"] = ParamDef((kv, dh), ("kv_heads", "head_dim"), "zeros")
+        defs["bv"] = ParamDef((kv, dh), ("kv_heads", "head_dim"), "zeros")
+    return defs
+
+
+def _qkv(p, x, cfg, key):
+    nc = cfg.numerics
+    q = am_einsum("bsd,dhk->bshk", x, p["wq"], cfg=nc, key=_nkey(key, 0))
+    k = am_einsum("bsd,dhk->bshk", x, p["wk"], cfg=nc, key=_nkey(key, 1))
+    v = am_einsum("bsd,dhk->bshk", x, p["wv"], cfg=nc, key=_nkey(key, 2))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def _window_for(cfg, kind: str) -> int:
+    if kind == "attn_sliding" or kind == "attn_local":
+        return cfg.window
+    if kind == "attn_chunked":
+        return cfg.window  # chunked-local: attend within aligned chunks
+    return 0
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0, chunked: bool = False,
+                    q_offset=0, block_kv: int = 1024):
+    """Streaming-softmax attention; never materializes (Sq, Skv) fully.
+
+    q: (B, Sq, H, Dh); k, v: (B, Skv, KV, Dh) with H a multiple of KV (GQA).
+    window > 0: restrict to the last `window` keys (sliding) or the aligned
+    `window`-sized chunk (chunked=True, Llama-4-style local attention).
+    q_offset: absolute position of q[0] (decode / prefix continuation).
+    Scans over KV blocks with an online max/sum accumulator (flash-attention
+    recurrence, jax.lax flavor) — the TPU-native adaptation of the memory-
+    hierarchy insight, VMEM-tileable by XLA.
+    """
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = 1.0 / math.sqrt(dh)
+    # Keep q/k/v in the model dtype (bf16); accumulate scores/output in f32
+    # via preferred_element_type — the MXU-native pattern. (Materializing f32
+    # copies of q/k/v was a top memory-traffic op in the baseline HLO.)
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(b, sq, kvh, rep, dh)
+
+    nblk = -(-skv // block_kv)
+    pad = nblk * block_kv - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblk, block_kv, kvh, dh)
+    vb = v.reshape(b, nblk, block_kv, kvh, dh)
+
+    q_pos = q_offset + jnp.arange(sq)  # (Sq,)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, j = blk  # (B, bk, KV, Dh), scalar block index
+        kv_pos = j * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bqgrd,bkgd->bqgrk", qf, kblk,
+                       preferred_element_type=jnp.float32)  # (B,Sq,KV,rep,bk)
+        mask = jnp.ones((sq, block_kv), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window:
+            if chunked:
+                mask &= (q_pos[:, None] // window) == (kv_pos[None, :] // window)
+            else:
+                mask &= q_pos[:, None] - kv_pos[None, :] < window
+        mask &= (kv_pos < skv)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqgrk,bkgd->bqgrd", p.astype(qf.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kvh, rep), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, rep), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, rep, dh), jnp.float32)
+    ks = jnp.moveaxis(kb, 1, 0)  # (nblk, B, bk, KV, Dh)
+    vs = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (ks, vs, jnp.arange(nblk))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def attention_train(p, x, cfg, kind: str, key=None):
+    """Full-sequence (train/prefill) attention. x: (B, S, d)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, key)
+    pos = jnp.arange(s)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    q = shd.logical_constraint(q, ("batch", "seq", "heads", "head_dim"))
+    k = shd.logical_constraint(k, ("batch", "seq", "kv_heads", "head_dim"))
+    window = _window_for(cfg, kind)
+    out = flash_attention(
+        q, k, v, causal=cfg.causal, window=window,
+        chunked=(kind == "attn_chunked"),
+    )
+    return am_einsum("bshk,hkd->bsd", out, p["wo"], cfg=cfg.numerics,
+                     key=_nkey(key, 3))
+
+
+def attention_cache_init(cfg, kind: str, batch: int, ctx_len: int, dtype):
+    """Decode cache: rolling (window) for local kinds, full ctx otherwise."""
+    window = _window_for(cfg, kind)
+    s = min(ctx_len, window) if window else ctx_len
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((batch, s, kv, dh), dtype),
+        "v": jnp.zeros((batch, s, kv, dh), dtype),
+    }
+
+
+def attention_cache_axes():
+    return {
+        "k": ("batch", "seq_kv", "kv_heads", "head_dim"),
+        "v": ("batch", "seq_kv", "kv_heads", "head_dim"),
+    }
+
+
+def attention_decode(p, cache, x_t, pos, cfg, kind: str, key=None):
+    """One-token decode. x_t: (B, 1, d); pos: scalar int32 (current index).
+
+    Returns (out (B, 1, d), new_cache). The cache is rolling for windowed
+    kinds (slot = pos % window) and linear otherwise.
+    """
+    b = x_t.shape[0]
+    q, k, v = _qkv(p, x_t, cfg, key)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+
+    s_cache = cache["k"].shape[1]
+    slot = jnp.where(s_cache > 0, pos % s_cache, 0)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    ck = shd.logical_constraint(ck, ("batch", "seq_kv", "kv_heads", "head_dim"))
+    cv = shd.logical_constraint(cv, ("batch", "seq_kv", "kv_heads", "head_dim"))
+
+    kvh, dh = cfg.n_kv_heads, cfg.d_head
+    rep = cfg.n_heads // kvh
+    # bf16 operands, f32 accumulation: casting the cache to f32 made XLA
+    # materialize a full-cache f32 copy per layer (baseline decode HLO).
+    qf = (q / jnp.asarray(math.sqrt(dh), q.dtype)).reshape(b, 1, kvh, rep, dh)
+    s = jnp.einsum("bqgrd,bkgd->bqgrk", qf.astype(ck.dtype), ck,
+                   preferred_element_type=jnp.float32)
+
+    # Valid-key mask: absolute position of each cache slot.
+    idx = jnp.arange(s_cache)
+    window = _window_for(cfg, kind)
+    if window:
+        # slot i holds absolute position: the latest p <= pos with p % s == i
+        abs_pos = pos - ((pos - idx) % s_cache)
+        valid = (abs_pos >= 0) & (abs_pos <= pos)
+        if kind == "attn_chunked":
+            valid &= (abs_pos // window) == (pos // window)
+        else:
+            valid &= pos - abs_pos < window
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqgrk,bkgd->bqgrd", w.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.n_heads, dh).astype(x_t.dtype)
+    y = am_einsum("bshk,hkd->bsd", out, p["wo"], cfg=cfg.numerics,
+                  key=_nkey(key, 3))
+    return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention_def(cfg) -> dict[str, ParamDef]:
+    return attention_def(cfg)
+
+
+def cross_attention(p, x, memory, cfg, key=None):
+    """x: (B, Sq, d) decoder; memory: (B, Skv, d) encoder output."""
+    nc = cfg.numerics
+    q = am_einsum("bsd,dhk->bshk", x, p["wq"], cfg=nc, key=_nkey(key, 0))
+    k = am_einsum("bsd,dhk->bshk", memory, p["wk"], cfg=nc, key=_nkey(key, 1))
+    v = am_einsum("bsd,dhk->bshk", memory, p["wv"], cfg=nc, key=_nkey(key, 2))
+    out = flash_attention(q, k, v, causal=False)
+    return am_einsum("bshk,hkd->bsd", out, p["wo"], cfg=nc, key=_nkey(key, 3))
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_def(cfg) -> dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "w_gate": ParamDef((d, f), ("embed", "mlp")),
+            "w_in": ParamDef((d, f), ("embed", "mlp")),
+            "w_out": ParamDef((f, d), ("mlp", "embed")),
+        }
+    return {
+        "w_in": ParamDef((d, f), ("embed", "mlp")),
+        "w_out": ParamDef((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p, x, cfg, key=None):
+    nc = cfg.numerics
+    if cfg.mlp_kind == "swiglu":
+        g = am_einsum("bsd,df->bsf", x, p["w_gate"], cfg=nc, key=_nkey(key, 0))
+        h = am_einsum("bsd,df->bsf", x, p["w_in"], cfg=nc, key=_nkey(key, 1))
+        h = jax.nn.silu(g) * h
+    else:
+        h = am_einsum("bsd,df->bsf", x, p["w_in"], cfg=nc, key=_nkey(key, 0))
+        h = jax.nn.gelu(h)
+    h = shd.logical_constraint(h, ("batch", "seq", "mlp"))
+    return am_einsum("bsf,fd->bsd", h, p["w_out"], cfg=nc, key=_nkey(key, 2))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style grouped einsum dispatch)
+# ---------------------------------------------------------------------------
+
+
+def moe_def(cfg) -> dict[str, ParamDef]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamDef((d, e), ("embed", None)),
+        "w_gate": ParamDef((e, d, f), ("experts", "embed", "expert_mlp")),
+        "w_in": ParamDef((e, d, f), ("experts", "embed", "expert_mlp")),
+        "w_out": ParamDef((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+
+
+def moe_ffn(p, x, cfg, key=None):
+    """Top-k routed expert SwiGLU. x: (B, S, d) -> (B, S, d).
+
+    Grouped one-hot dispatch: tokens are reshaped into groups of
+    ``cfg.moe_group`` so the dispatch tensor is O(tokens * group * cf)
+    — group size is the memory/locality knob (see EXPERIMENTS.md §Perf).
+    Expert dim shards over "data" (EP); expert d_ff over "model" (TP).
+    """
+    nc = cfg.numerics
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = min(cfg.moe_group, s)
+    tokens = b * s
+    G = tokens // g
+    xg = x.reshape(G, g, d)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)  # (G, g, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(g * k * cfg.capacity_factor / e) + 1
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (G, g, k, E)
+    flat = onehot.reshape(G, g * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1  # position within expert
+    pos = pos.reshape(G, g, k, e)
+    keep = (pos < cap) & (onehot > 0)
+    pos_c = jnp.clip(pos, 0, cap - 1)
+    pos_oh = jax.nn.one_hot(pos_c, cap, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    # (G, g, k, E, C) -> dispatch (binary) and combine (gated)
+    disp = pos_oh.sum(2)  # (G, g, E, C)
+    comb = (pos_oh * gates[..., None, None].astype(x.dtype)).sum(2)
+
+    # Dispatch: compute locally on the token shard (G over data), THEN flip
+    # the constraint to expert-sharded — GSPMD lowers the reshard as an
+    # all-to-all moving each dispatched token once. Constraining the einsum
+    # output directly to E-sharded made GSPMD all-gather every token to
+    # every data row (~8x the traffic; §Perf iteration 4).
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xg)  # (G, E, C, d)
+    xe = shd.logical_constraint(xe, ("moe_tokens", None, None, "embed"))
+    xe = shd.logical_constraint(xe, ("moe_pod", "experts", None, "embed"))
+    hg = am_einsum("gecd,edf->gecf", xe, p["w_gate"], cfg=nc, key=_nkey(key, 0))
+    hi = am_einsum("gecd,edf->gecf", xe, p["w_in"], cfg=nc, key=_nkey(key, 1))
+    h = jax.nn.silu(hg) * hi
+    h = shd.logical_constraint(h, ("moe_pod", "experts", None, "expert_mlp"))
+    out = am_einsum("gecf,efd->gecd", h, p["w_out"], cfg=nc, key=_nkey(key, 2))
+    out = shd.logical_constraint(out, ("moe_pod", "experts", None, "embed"))
+    # Return all-to-all: back to token-major for the local combine.
+    out = shd.logical_constraint(out, ("moe_tokens", None, None, "embed"))
+    y = jnp.einsum("gsec,gecd->gsd", comb, out)
+    y = y.reshape(b, s, d)
+    return shd.logical_constraint(y, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+CONV_W = 4
+
+
+def rglru_def(cfg) -> dict[str, ParamDef]:
+    d = cfg.d_model
+    r = cfg.d_rnn
+    return {
+        "w_x": ParamDef((d, r), ("embed", "mlp")),
+        "w_y": ParamDef((d, r), ("embed", "mlp")),
+        "conv_w": ParamDef((CONV_W, r), ("conv", "mlp")),
+        "conv_b": ParamDef((r,), ("mlp",), "zeros"),
+        "lru_a": ParamDef((r,), ("mlp",), "rglru_a"),
+        "w_rgate": ParamDef((r, r), ("mlp", None)),
+        "w_igate": ParamDef((r, r), ("mlp", None)),
+        "w_out": ParamDef((r, d), ("mlp", "embed")),
+    }
+
+
+def _rglru_scan(xr, gate_r, gate_i, lam):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+
+    xr/gates: (B, S, R). a_t = exp(-c * softplus(lam) * r_t);
+    b_t = sqrt(1 - a_t^2) * (i_t * x_t).
+    """
+    log_a = -RGLRU_C * jax.nn.softplus(lam) * gate_r  # (B,S,R) <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (gate_i * xr)
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(p, x, cfg, key=None, state=None, pos=None):
+    """Griffin recurrent block. Train: state=None, x (B,S,d). Decode: x (B,1,d),
+    state = {"h": (B,R), "conv": (B, CONV_W-1, R)}; returns (y, new_state)."""
+    nc = cfg.numerics
+    xb = am_einsum("bsd,dr->bsr", x, p["w_x"], cfg=nc, key=_nkey(key, 0))
+    yb = am_einsum("bsd,dr->bsr", x, p["w_y"], cfg=nc, key=_nkey(key, 1))
+    yb = jax.nn.gelu(yb)
+
+    if state is None:
+        xc = jnp.pad(xb, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+        conv = sum(
+            xc[:, i : i + xb.shape[1], :] * p["conv_w"][i]
+            for i in range(CONV_W)
+        ) + p["conv_b"]
+        gr = jax.nn.sigmoid(
+            am_einsum("bsr,rq->bsq", conv, p["w_rgate"], cfg=nc, key=_nkey(key, 2)))
+        gi = jax.nn.sigmoid(
+            am_einsum("bsr,rq->bsq", conv, p["w_igate"], cfg=nc, key=_nkey(key, 3)))
+        h = _rglru_scan(conv.astype(jnp.float32), gr.astype(jnp.float32),
+                        gi.astype(jnp.float32), p["lru_a"].astype(jnp.float32))
+        h = h.astype(x.dtype)
+        out = am_einsum("bsr,rd->bsd", h * yb, p["w_out"], cfg=nc, key=_nkey(key, 4))
+        return out, None
+
+    # Decode: single step with carried conv tail + recurrent state.
+    tail = state["conv"]  # (B, CONV_W-1, R)
+    xs = jnp.concatenate([tail, xb], axis=1)  # (B, CONV_W, R)
+    conv = sum(xs[:, i, :] * p["conv_w"][i] for i in range(CONV_W)) + p["conv_b"]
+    gr = jax.nn.sigmoid(
+        am_einsum("br,rq->bq", conv, p["w_rgate"], cfg=nc, key=_nkey(key, 2)))
+    gi = jax.nn.sigmoid(
+        am_einsum("br,rq->bq", conv, p["w_igate"], cfg=nc, key=_nkey(key, 3)))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lru_a"].astype(jnp.float32)) * gr.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    bterm = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (
+        gi.astype(jnp.float32) * conv.astype(jnp.float32))
+    h = (a * state["h"].astype(jnp.float32) + bterm).astype(x.dtype)
+    out = am_einsum("br,rd->bd", h * yb[:, 0, :], p["w_out"], cfg=nc, key=_nkey(key, 4))
+    new_state = {"h": h, "conv": xs[:, 1:, :]}
+    return out[:, None, :], new_state
+
+
+def rglru_state_init(cfg, batch: int, dtype):
+    r = cfg.d_rnn
+    return {
+        "h": jnp.zeros((batch, r), dtype),
+        "conv": jnp.zeros((batch, CONV_W - 1, r), dtype),
+    }
+
+
+def rglru_state_axes():
+    return {"h": ("batch", "mlp"), "conv": ("batch", None, "mlp")}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks (mLSTM matrix-memory + sLSTM scalar-memory)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_def(cfg) -> dict[str, ParamDef]:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    return {
+        "wq": ParamDef((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, h, dh), ("embed", "heads", "head_dim")),
+        "wv": ParamDef((d, h, dh), ("embed", "heads", "head_dim")),
+        "w_i": ParamDef((d, h), ("embed", "heads")),
+        "w_f": ParamDef((d, h), ("embed", "heads")),
+        "w_o": ParamDef((d, h, dh), ("embed", "heads", "head_dim")),
+        "wo": ParamDef((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def mlstm_block(p, x, cfg, key=None, state=None, pos=None):
+    """mLSTM: C_t = f C + i v k^T (matrix memory per head).
+
+    Train: chunkwise-parallel form (quadratic within chunks, linear across).
+    Decode: O(1) state update. State: {"C": (B,H,Dh,Dh), "n": (B,H,Dh), "m": (B,H)}.
+    """
+    nc = cfg.numerics
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = am_einsum("bsd,dhk->bshk", x, p["wq"], cfg=nc, key=_nkey(key, 0))
+    k = am_einsum("bsd,dhk->bshk", x, p["wk"], cfg=nc, key=_nkey(key, 1))
+    v = am_einsum("bsd,dhk->bshk", x, p["wv"], cfg=nc, key=_nkey(key, 2))
+    k = k / math.sqrt(dh)
+    logf = -jax.nn.softplus(  # log f_t in (-inf, 0)
+        -jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_f"].astype(jnp.float32)))
+    logi = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_i"].astype(jnp.float32))
+
+    if state is not None:
+        # Single decode step (s == 1). q[:, 0] etc: (B, H, Dh).
+        m_prev, C_prev, n_prev = state["m"], state["C"], state["n"]
+        lf, li = logf[:, 0], logi[:, 0]  # (B,H)
+        m_new = jnp.maximum(lf + m_prev, li)
+        fg = jnp.exp(lf + m_prev - m_new)[..., None]
+        ig = jnp.exp(li - m_new)[..., None]
+        kf = k[:, 0].astype(jnp.float32)
+        vf = v[:, 0].astype(jnp.float32)
+        qf = q[:, 0].astype(jnp.float32)
+        C_new = fg[..., None] * C_prev + ig[..., None] * (kf[..., :, None] * vf[..., None, :])
+        n_new = fg * n_prev + ig * kf
+        num = jnp.einsum("bhkv,bhk->bhv", C_new, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf)),
+                          jnp.exp(-m_new))
+        out = (num / den[..., None])[:, None]  # (B,1,H,Dh)
+        og = jax.nn.sigmoid(
+            am_einsum("bsd,dhk->bshk", x, p["w_o"], cfg=nc, key=_nkey(key, 3)))
+        y = am_einsum("bshk,hkd->bsd", (out * og.astype(jnp.float32)).astype(x.dtype),
+                      p["wo"], cfg=nc, key=_nkey(key, 4))
+        return y, {"m": m_new, "C": C_new, "n": n_new}
+
+    # Train/prefill: chunkwise-recurrent form. Quadratic only within L-sized
+    # chunks ((B, L, L, H) transient); a (C, n, m) matrix-memory state is
+    # scanned across chunks — O(S L) time, O(1) state, exact (stabilized in
+    # log space like the flash-attention recurrence).
+    L = min(cfg.scan_chunk, s)
+    nchunk = -(-s // L)
+    pad = nchunk * L - s
+    qf = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))  # pad: logf=0 (keep state)
+    li = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+
+    def chunked(t):  # (B, S', ...) -> (nchunk, B, L, ...)
+        return jnp.moveaxis(
+            t.reshape((b, nchunk, L) + t.shape[2:]), 1, 0)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry  # scaled by exp(m): true = val * exp(m)
+        qc, kc, vc, lfc, lic = xs  # (B,L,H,dh) / (B,L,H)
+        F = jnp.cumsum(lfc, axis=1)  # inclusive decay-to-t, (B,L,H)
+        bu = lic - F  # log i_u - F_u
+        run_max = jax.lax.associative_scan(jnp.maximum, bu, axis=1)
+        m_t = jnp.maximum(m[:, None] + F, F + run_max)  # (B,L,H)
+        inter_w = jnp.exp(m[:, None] + F - m_t)  # (B,L,H)
+        D = F[:, :, None, :] + bu[:, None, :, :] - m_t[:, :, None, :]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        W = jnp.where(tri[None, :, :, None], jnp.exp(D), 0.0)  # (B,L,L,H)
+        sdot = jnp.einsum("bqhd,bkhd->bqkh", qc, kc)
+        num = (
+            inter_w[..., None] * jnp.einsum("bqhk,bhkv->bqhv", qc, C)
+            + jnp.einsum("bqkh,bkhv->bqhv", W * sdot, vc)
+        )
+        den_val = (
+            inter_w * jnp.einsum("bqhk,bhk->bqh", qc, n)
+            + jnp.einsum("bqkh->bqh", W * sdot)
+        )
+        den = jnp.maximum(jnp.abs(den_val), jnp.exp(-m_t))
+        h_out = num / den[..., None]  # (B,L,H,dh)
+
+        F_tot = F[:, -1]  # (B,H)
+        m_next = jnp.maximum(m + F_tot, F_tot + run_max[:, -1])
+        carry_w = jnp.exp(m + F_tot - m_next)[:, None]  # (B,1,H)
+        in_w = jnp.exp(F_tot[:, None] + bu - m_next[:, None])  # (B,L,H)
+        C_next = carry_w[..., None, None][:, 0] * C + jnp.einsum(
+            "blhk,blhv->bhkv", in_w[..., None] * kc, vc)
+        n_next = carry_w[:, 0, :, None] * n + jnp.einsum("blh,blhk->bhk", in_w, kc)
+        return (C_next, n_next, m_next), h_out
+
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    _, outs = jax.lax.scan(
+        chunk_step, (C0, n0, m0),
+        (chunked(qf), chunked(kf), chunked(vf), chunked(lf), chunked(li)),
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nchunk * L, h, dh)[:, :s]
+    og = jax.nn.sigmoid(
+        am_einsum("bsd,dhk->bshk", x, p["w_o"], cfg=nc, key=_nkey(key, 3)))
+    y = am_einsum("bshk,hkd->bsd", (out * og.astype(jnp.float32)).astype(x.dtype),
+                  p["wo"], cfg=nc, key=_nkey(key, 4))
+    return y, None
+
+
+def mlstm_state_init(cfg, batch: int, dtype):
+    h, dh = cfg.n_heads, cfg.d_head
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_state_axes():
+    return {"C": ("batch", "heads", None, None), "n": ("batch", "heads", None),
+            "m": ("batch", "heads")}
+
+
+def slstm_def(cfg) -> dict[str, ParamDef]:
+    # All-replicated on the model axis: the recurrent matmuls run once per
+    # TIME STEP inside a lax.scan, so TP-sharding them emits a collective
+    # per token — 254 GB/step of all-gathers in the xlstm-125m baseline
+    # (§Perf iteration 6). At d_model<=1k replication is strictly better.
+    d = cfg.d_model
+    return {
+        "w_z": ParamDef((d, d), ("embed", None)),
+        "w_i": ParamDef((d, d), ("embed", None)),
+        "w_f": ParamDef((d, d), ("embed", None)),
+        "w_o": ParamDef((d, d), ("embed", None)),
+        "r_z": ParamDef((d, d), (None, None)),
+        "r_i": ParamDef((d, d), (None, None)),
+        "r_f": ParamDef((d, d), (None, None)),
+        "r_o": ParamDef((d, d), (None, None)),
+        "w_out": ParamDef((d, d), (None, "embed")),
+    }
+
+
+def slstm_block(p, x, cfg, key=None, state=None, pos=None):
+    """sLSTM: recurrent-weighted scalar-memory LSTM with exp gating.
+
+    Truly sequential (recurrent R matrices) -> lax.scan over time for train;
+    O(1) decode. State: {"c","n","h","m"} each (B, d).
+    """
+    nc = cfg.numerics
+    b, s, d = x.shape
+    zx = am_einsum("bsd,de->bse", x, p["w_z"], cfg=nc, key=_nkey(key, 0))
+    ix = am_einsum("bsd,de->bse", x, p["w_i"], cfg=nc, key=_nkey(key, 1))
+    fx = am_einsum("bsd,de->bse", x, p["w_f"], cfg=nc, key=_nkey(key, 2))
+    ox = am_einsum("bsd,de->bse", x, p["w_o"], cfg=nc, key=_nkey(key, 3))
+
+    def step(carry, t):
+        c, n, hprev, m = carry
+        zt, it, ft, ot = t
+        hp = hprev.astype(jnp.float32)
+        z = jnp.tanh(zt + hp @ p["r_z"].astype(jnp.float32))
+        logi = it + hp @ p["r_i"].astype(jnp.float32)
+        logf = -jax.nn.softplus(-(ft + hp @ p["r_f"].astype(jnp.float32)))
+        o = jax.nn.sigmoid(ot + hp @ p["r_o"].astype(jnp.float32))
+        m_new = jnp.maximum(logf + m, logi)
+        ig = jnp.exp(logi - m_new)
+        fg = jnp.exp(logf + m - m_new)
+        c_new = fg * c + ig * z
+        n_new = fg * n + ig
+        h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, h_new, m_new), h_new
+
+    if state is not None:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+        t = (zx[:, 0].astype(jnp.float32), ix[:, 0].astype(jnp.float32),
+             fx[:, 0].astype(jnp.float32), ox[:, 0].astype(jnp.float32))
+        carry, h = step(carry, t)
+        y = am_einsum("bd,de->be", h.astype(x.dtype), p["w_out"], cfg=nc,
+                      key=_nkey(key, 4))
+        new_state = dict(zip(("c", "n", "h", "m"), carry))
+        return y[:, None, :], new_state
+
+    init = (jnp.zeros((b, d)), jnp.zeros((b, d)), jnp.zeros((b, d)),
+            jnp.full((b, d), -1e30))
+    ts = (zx.swapaxes(0, 1).astype(jnp.float32), ix.swapaxes(0, 1).astype(jnp.float32),
+          fx.swapaxes(0, 1).astype(jnp.float32), ox.swapaxes(0, 1).astype(jnp.float32))
+    _, hs = jax.lax.scan(step, init, ts)
+    h = hs.swapaxes(0, 1).astype(x.dtype)  # (B,S,d)
+    return am_einsum("bsd,de->bse", h, p["w_out"], cfg=nc, key=_nkey(key, 4)), None
+
+
+def slstm_state_init(cfg, batch: int, dtype):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_state_axes():
+    ax = ("batch", "mlp")
+    return {"c": ax, "n": ax, "h": ax, "m": ax}

@@ -1,0 +1,197 @@
+"""Architecture registry: the 10 assigned archs + the paper's CNN.
+
+Each arch ships a full-scale ModelConfig (exact assigned dimensions), a
+reduced smoke config (same family, CPU-runnable), the set of applicable
+input shapes, and step-function dispatch (decoder-only vs encoder-decoder).
+
+Input-shape cells (assignment):
+  train_4k     seq 4096   global_batch 256   train_step
+  prefill_32k  seq 32768  global_batch 32    forward (no cache)
+  decode_32k   ctx 32768  global_batch 128   serve_step (1 token + cache)
+  long_500k    ctx 524288 global_batch 1     serve_step; sub-quadratic only
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.transformer import ModelConfig
+
+ARCH_IDS = (
+    "starcoder2-15b",
+    "smollm-360m",
+    "llama3-8b",
+    "qwen2.5-3b",
+    "llama4-maverick-400b-a17b",
+    "phi3.5-moe-42b-a6.6b",
+    "recurrentgemma-9b",
+    "seamless-m4t-large-v2",
+    "internvl2-26b",
+    "xlstm-125m",
+)
+
+SHAPES: dict[str, dict[str, Any]] = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    config: ModelConfig
+    smoke: ModelConfig
+    skip_shapes: tuple[str, ...] = ()
+    skip_reasons: dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def _module(name: str):
+    mod = name.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get(name: str) -> ArchSpec:
+    return _module(name).SPEC
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCH_IDS
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells, honoring per-arch skips."""
+    out = []
+    for a in ARCH_IDS:
+        spec = get(a)
+        for s in SHAPES:
+            if s in spec.skip_shapes and not include_skipped:
+                continue
+            out.append((a, s))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step-function dispatch (decoder-only vs enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.family == "audio"
+
+
+def loss_fn(cfg) -> Callable:
+    return encdec.loss_fn if is_encdec(cfg) else transformer.loss_fn
+
+
+def forward_fn(cfg) -> Callable:
+    return encdec.forward if is_encdec(cfg) else transformer.forward
+
+
+def decode_fn(cfg) -> Callable:
+    return encdec.decode_step if is_encdec(cfg) else transformer.decode_step
+
+
+def abstract_params(cfg):
+    return (encdec if is_encdec(cfg) else transformer).abstract_params(cfg)
+
+
+def init_params(cfg, key):
+    return (encdec if is_encdec(cfg) else transformer).init_params(cfg, key)
+
+
+def param_specs(cfg, mesh, rules=None):
+    from repro.parallel import sharding as shd
+
+    rules = rules or shd.DEFAULT
+    return (encdec if is_encdec(cfg) else transformer).param_specs(cfg, mesh, rules)
+
+
+MEM_LEN = 4096  # enc-dec decode: fixed encoder-memory length
+
+
+def cache_ctx(cfg: ModelConfig, seq: int) -> int:
+    """Decode-cache length: bounded by the attention window if local."""
+    return seq
+
+
+def abstract_cache(cfg, batch: int, ctx: int):
+    if is_encdec(cfg):
+        return encdec.abstract_cache(cfg, batch, ctx, MEM_LEN)
+    return transformer.abstract_cache(cfg, batch, ctx)
+
+
+def cache_specs(cfg, batch: int, ctx: int, mesh, rules=None):
+    from repro.parallel import sharding as shd
+
+    rules = rules or shd.DEFAULT
+    if is_encdec(cfg):
+        return encdec.cache_specs(cfg, batch, ctx, MEM_LEN, mesh, rules)
+    return transformer.cache_specs(cfg, batch, ctx, mesh, rules)
+
+
+def init_cache(cfg, batch: int, ctx: int):
+    if is_encdec(cfg):
+        return encdec.init_cache(cfg, batch, ctx, MEM_LEN)
+    return transformer.init_cache(cfg, batch, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, dry-run safe)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, *, batch_override: int = 0,
+                seq_override: int = 0) -> dict:
+    """Abstract model inputs for one cell. Never allocates."""
+    sh = SHAPES[shape_name]
+    b = batch_override or sh["batch"]
+    s = seq_override or sh["seq"]
+    kind = sh["kind"]
+    i32 = jnp.int32
+    dt = cfg.jnp_dtype
+
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, i32)
+
+    if kind in ("train", "prefill"):
+        batch: dict[str, Any] = {"tokens": tok((b, s))}
+        if kind == "train":
+            batch["labels"] = tok((b, s))
+        if cfg.frontend == "vision_stub":
+            batch["patches"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), dt)
+        if cfg.frontend == "audio_stub":
+            batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+        return {"batch": batch}
+
+    # decode: one new token against a ctx-length cache
+    cache = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        abstract_cache(cfg, b, s),
+    )
+    return {
+        "cache": cache,
+        "tokens": tok((b,)),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def demo_inputs(cfg: ModelConfig, shape_name: str, *, batch: int, seq: int, key=None):
+    """Concrete small inputs matching input_specs (smoke tests / examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape_name, batch_override=batch, seq_override=seq)
+
+    def concretize(s: jax.ShapeDtypeStruct):
+        if s.dtype == jnp.int32 and len(s.shape) >= 1:
+            return jax.random.randint(key, s.shape, 0, max(cfg.vocab, 2), jnp.int32)
+        if s.dtype == jnp.int32:
+            return jnp.zeros(s.shape, jnp.int32)
+        return jax.random.normal(key, s.shape, jnp.float32).astype(s.dtype) * 0.02
+
+    return jax.tree.map(concretize, specs)

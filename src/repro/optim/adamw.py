@@ -1,0 +1,193 @@
+"""AdamW with ZeRO-1 state sharding and optional factored second moments.
+
+Memory strategy for the 400B-class cells (see DESIGN.md):
+  * params live in the model dtype (bf16) with Megatron TP sharding;
+  * the optimizer holds the f32 master copy + moments, sharded over EVERY
+    divisible mesh axis (ZeRO-1: `zero1_spec` adds ("pod","data") to each
+    state leaf's PartitionSpec wherever the shape divides) — GSPMD then
+    materializes the reduce-scatter(grads) / all-gather(params) pattern;
+  * `factored=True` replaces the full second moment with Adafactor-style
+    row/col statistics for >=2-D leaves (0.5 vs 4 bytes/param), and keeps
+    first moments in bf16 — 6.5 B/param of state instead of 12.
+
+Functional API: state is a pytree, update is jit-safe, no globals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    factored: bool = True  # Adafactor-style second moment for ndim >= 2
+    momentum_dtype: str = "bfloat16"
+
+
+def _factored_dims(shape):
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def init(params, cfg: AdamWConfig):
+    def leaf(p):
+        st = {"master": p.astype(jnp.float32)}
+        st["m"] = jnp.zeros(p.shape, jnp.dtype(cfg.momentum_dtype))
+        if cfg.factored and _factored_dims(p.shape):
+            st["v_row"] = jnp.zeros(p.shape[:-1], jnp.float32)
+            st["v_col"] = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        else:
+            st["v"] = jnp.zeros(p.shape, jnp.float32)
+        return st
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "leaves": jax.tree.map(leaf, params),
+    }
+
+
+def abstract_init(params, cfg: AdamWConfig):
+    return jax.eval_shape(lambda p: init(p, cfg), params)
+
+
+def _leaf_update(g, st, cfg: AdamWConfig, step, lr):
+    g = g.astype(jnp.float32)
+    master = st["master"]
+    b1, b2 = cfg.b1, cfg.b2
+    m = st["m"].astype(jnp.float32) * b1 + g * (1 - b1)
+    if "v" in st:
+        v = st["v"] * b2 + g * g * (1 - b2)
+        vhat = v / (1 - b2 ** step)
+        new_v = {"v": v}
+    else:
+        gsq = g * g + 1e-30
+        v_row = st["v_row"] * b2 + jnp.mean(gsq, axis=-1) * (1 - b2)
+        v_col = st["v_col"] * b2 + jnp.mean(gsq, axis=-2) * (1 - b2)
+        # Shazeer-Stern: V ~ (R x C) / mean(R)
+        denom = jnp.mean(v_row, axis=-1, keepdims=True)
+        v = v_row[..., None] * v_col[..., None, :] / jnp.maximum(denom[..., None], 1e-30)
+        vhat = v / (1 - b2 ** step)
+        new_v = {"v_row": v_row, "v_col": v_col}
+    mhat = m / (1 - b1 ** step)
+    upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+    new_master = master - lr * upd
+    new_st = {"master": new_master, "m": m.astype(jnp.dtype(cfg.momentum_dtype)),
+              **new_v}
+    return new_master, new_st
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads, state, cfg: AdamWConfig, param_dtype, lr=None):
+    """(grads, state) -> (new_params, new_state). Clips by global norm.
+
+    `lr` (scalar, may be traced) overrides cfg.lr — the schedule hook.
+    """
+    step = (state["step"] + 1).astype(jnp.float32)
+    lr = cfg.lr if lr is None else lr
+    if cfg.grad_clip > 0:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    out = jax.tree.map(
+        lambda g, st: _leaf_update(g, st, cfg, step, lr), grads, state["leaves"],
+        is_leaf=lambda x: isinstance(x, dict) and "master" in x,
+    )
+    new_params = jax.tree.map(
+        lambda o: o[0].astype(param_dtype), out,
+        is_leaf=lambda x: isinstance(x, tuple))
+    new_leaves = jax.tree.map(
+        lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"step": state["step"] + 1, "leaves": new_leaves}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding of optimizer state
+# ---------------------------------------------------------------------------
+
+
+def zero1_spec(spec: P, shape, mesh, extra_axes=("pod", "data")) -> P:
+    """Extend a param spec with extra mesh axes on divisible dims (ZeRO-1)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used: set[str] = set()
+    for p in parts:
+        if p is None:
+            continue
+        for a in (p if isinstance(p, tuple) else (p,)):
+            used.add(a)
+    for ax in extra_axes:
+        if ax not in mesh.shape or ax in used:
+            continue
+        best = -1
+        for i, d in enumerate(shape):
+            cur = parts[i]
+            cur_axes = () if cur is None else (cur if isinstance(cur, tuple) else (cur,))
+            denom = int(np.prod([mesh.shape[a] for a in cur_axes])) if cur_axes else 1
+            if d % (denom * mesh.shape[ax]) == 0:
+                if best < 0 or d > shape[best]:
+                    best = i
+        if best >= 0:
+            cur = parts[best]
+            cur_axes = () if cur is None else (cur if isinstance(cur, tuple) else (cur,))
+            parts[best] = tuple(cur_axes) + (ax,)
+            used.add(ax)
+    parts = [p[0] if isinstance(p, tuple) and len(p) == 1 else p for p in parts]
+    return P(*parts)
+
+
+def state_specs(param_specs_tree, abstract_params_tree, mesh, cfg: AdamWConfig,
+                zero1: bool = True):
+    """PartitionSpec pytree matching init()'s structure."""
+
+    def leaf(spec, p):
+        shape = p.shape
+        base = zero1_spec(spec, shape, mesh) if zero1 else spec
+        st = {"master": base, "m": base}
+        if cfg.factored and _factored_dims(shape):
+            row = P(*list(base)[:-1]) if len(list(base)) >= 1 else P()
+            colparts = list(base) + [None] * (len(shape) - len(list(base)))
+            col = P(*(colparts[:-2] + colparts[-1:]))
+            st["v_row"] = _trim(row, shape[:-1], mesh)
+            st["v_col"] = _trim(col, shape[:-2] + shape[-1:], mesh)
+        else:
+            st["v"] = base
+        return st
+
+    return {
+        "step": P(),
+        "leaves": jax.tree.map(leaf, param_specs_tree, abstract_params_tree,
+                               is_leaf=lambda x: isinstance(x, P)),
+    }
+
+
+def _trim(spec: P, shape, mesh) -> P:
+    """Drop mesh axes that no longer divide after a dim was removed."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for p, d in zip(parts, shape):
+        if p is None:
+            out.append(None)
+            continue
+        axes = p if isinstance(p, tuple) else (p,)
+        keep = []
+        rem = d
+        for a in axes:
+            if rem % mesh.shape[a] == 0:
+                keep.append(a)
+                rem //= mesh.shape[a]
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)

@@ -1,0 +1,58 @@
+"""The paper's technique inside the TRAINING path: gradients flow through
+the surrogate-AM matmuls and a step updates parameters sanely."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.amlinear import NumericsConfig
+from repro.models import registry as R
+
+
+def test_loss_and_grads_through_am_surrogate():
+    base = dataclasses.replace(R.get("llama3-8b").smoke, dtype="float32",
+                               remat=False)
+    cfg = base.with_numerics(NumericsConfig(
+        mode="surrogate", policy="uniform:pm_csi", tile_k=16, tile_n=16))
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    batch = R.demo_inputs(cfg, "train_4k", batch=2, seq=16)["batch"]
+
+    def loss(p):
+        return R.loss_fn(cfg)(p, batch, cfg, key=jax.random.PRNGKey(1))
+
+    l, g = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l))
+    gn = np.sqrt(sum(float(jnp.sum(jnp.square(x))) for x in jax.tree.leaves(g)))
+    assert np.isfinite(gn) and gn > 0
+
+    # grads under AM numerics stay close to exact grads (calibrated sigma~1e-7)
+    def loss_exact(p):
+        return R.loss_fn(base)(p, batch, base)
+
+    _, g_exact = jax.value_and_grad(loss_exact)(params)
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(g_exact)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0.3, atol=5e-3)
+
+
+def test_am_surrogate_train_step_decreases_loss():
+    base = dataclasses.replace(R.get("smollm-360m").smoke, dtype="float32",
+                               remat=False)
+    cfg = base.with_numerics(NumericsConfig(
+        mode="surrogate", policy="rr:4", tile_k=16, tile_n=16))
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    batch = R.demo_inputs(cfg, "train_4k", batch=4, seq=24)["batch"]
+
+    @jax.jit
+    def step(p, key):
+        def loss(q):
+            return R.loss_fn(cfg)(q, batch, cfg, key=key)
+        l, g = jax.value_and_grad(loss)(p)
+        return jax.tree.map(lambda x, d: x - 0.05 * d, p, g), l
+
+    losses = []
+    for i in range(15):
+        params, l = step(params, jax.random.PRNGKey(i))
+        losses.append(float(l))
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])

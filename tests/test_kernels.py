@@ -1,0 +1,91 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, bit equality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schemes, surrogate
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 16), (8, 32, 16), (16, 32, 32)])
+def test_bitexact_matmul_kernel_vs_ref(rng, m, k, n):
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    vids = jnp.asarray(rng.integers(0, 9, (k, n)), jnp.int32)
+    got = ops.am_matmul_bitexact(x, w, vids, block=(8, 16, 16))
+    want = ref.am_matmul_bitexact_ref(x, w, vids, chunk_k=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitexact_matmul_kernel_padding(rng):
+    # Non-multiple shapes exercise the pad+crop path.
+    x = jnp.asarray(rng.standard_normal((5, 19)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((19, 9)).astype(np.float32))
+    vids = jnp.zeros((19, 9), jnp.int32)
+    got = ops.am_matmul_bitexact(x, w, vids, block=(8, 16, 16))
+    want = x @ w
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-6)
+
+
+@pytest.mark.parametrize("b,h,w,cin,f", [(2, 8, 8, 3, 4), (1, 10, 10, 3, 6)])
+def test_bitexact_conv_kernel_vs_ref(rng, b, h, w, cin, f):
+    x = jnp.asarray(rng.standard_normal((b, h, w, cin)).astype(np.float32))
+    wgt = jnp.asarray(rng.standard_normal((f, 3, 3, cin)).astype(np.float32))
+    sm = jnp.asarray(rng.integers(0, 9, (f, 3, 3)), jnp.int32)
+    got = ops.am_conv2d_bitexact(x, wgt, sm, impl="kernel")
+    want = ops.am_conv2d_bitexact(x, wgt, sm, impl="ref")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv_exact_slots_match_lax_conv(rng):
+    x = jnp.asarray(rng.standard_normal((2, 12, 12, 3)).astype(np.float32))
+    wgt = jnp.asarray(rng.standard_normal((4, 3, 3, 3)).astype(np.float32))
+    sm = jnp.zeros((4, 3, 3), jnp.int32)  # all exact
+    got = ops.am_conv2d_bitexact(x, wgt, sm, impl="ref")
+    want = ref.conv2d_exact_ref(x, wgt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (128, 256, 128)])
+def test_surrogate_matmul_kernel_vs_ref(rng, m, k, n):
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    mu = jnp.full((k, n), 1e-6, jnp.float32)
+    sg = jnp.full((k, n), 1e-7, jnp.float32)
+    key = jax.random.PRNGKey(0)
+    got = ops.am_surrogate_matmul(x, w, mu, sg, key, impl="kernel")
+    want = ops.am_surrogate_matmul(x, w, mu, sg, key, impl="ref")
+    # blocked-k accumulation order differs from the one-shot ref
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-3)
+
+
+def test_surrogate_matmul_kernel_nonaligned(rng):
+    x = jnp.asarray(rng.standard_normal((100, 200)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((200, 60)).astype(np.float32))
+    mu = jnp.zeros((200, 60), jnp.float32)
+    sg = jnp.zeros((200, 60), jnp.float32)
+    key = jax.random.PRNGKey(1)
+    got = ops.am_surrogate_matmul(x, w, mu, sg, key, impl="kernel")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_surrogate_moments_match_bitexact_statistics(rng):
+    """Calibration: the surrogate's (mu, sigma) must reproduce the bit-exact
+    AM's relative-error moments on standard-normal operands."""
+    from repro.core import fp32_mul
+
+    n = 1 << 14
+    a = rng.standard_normal(n).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    exact = fp32_mul.fp32_multiply_batch(a, b, "exact")
+    mu_t, sg_t = surrogate.moment_tables()
+    for v in ("pm_ni", "nm_si"):
+        ap = fp32_mul.fp32_multiply_batch(a, b, v)
+        ok = np.isfinite(exact) & (exact != 0)
+        rel = (ap[ok] - exact[ok]) / exact[ok].astype(np.float64)
+        vid = schemes.VARIANT_IDS[v]
+        assert abs(rel.mean() - mu_t[vid]) < 5e-8
+        assert abs(rel.std() - sg_t[vid]) < 5e-8

@@ -1,0 +1,83 @@
+"""NSGA-II unit tests + the paper-CNN optimization pipeline (small scale)."""
+import numpy as np
+import pytest
+
+from repro.core import hwmodel, interleave, nsga2, schemes
+
+
+def test_non_dominated_sort_simple():
+    objs = np.array([[1.0, 1.0], [2.0, 2.0], [1.0, 2.0], [0.5, 3.0]])
+    fronts = nsga2.fast_non_dominated_sort(objs)
+    assert set(fronts[0].tolist()) == {0, 3}  # (1,1) and (0.5,3) non-dominated
+    assert 1 in fronts[-1] or 1 in fronts[1]
+
+
+def test_crowding_distance_extremes_infinite():
+    objs = np.array([[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]])
+    d = nsga2.crowding_distance(objs)
+    assert np.isinf(d[0]) and np.isinf(d[3])
+    assert np.isfinite(d[1]) and np.isfinite(d[2])
+
+
+def test_optimize_converges_on_toy_biobjective():
+    front = nsga2.optimize(
+        lambda g: np.array([g.sum(), ((g - 2) ** 2).sum()]),
+        genome_len=10, alphabet=[0, 1, 2, 3], pop_size=16, generations=12,
+        seed=0)
+    objs = np.stack([i.objectives for i in front])
+    # Front must include near-extremes of both objectives.
+    assert objs[:, 0].min() <= 2
+    assert objs[:, 1].min() <= 4
+    # And be mutually non-dominated.
+    fronts = nsga2.fast_non_dominated_sort(objs)
+    assert len(fronts[0]) == len(front)
+
+
+def test_knee_point_prefers_balanced():
+    ind = lambda o: nsga2.Individual(genome=np.zeros(1, np.int32),
+                                     objectives=np.asarray(o, float))
+    front = [ind([0.0, 10.0]), ind([10.0, 0.0]), ind([2.0, 2.0])]
+    knee = nsga2.knee_point(front)
+    np.testing.assert_array_equal(knee.objectives, [2.0, 2.0])
+
+
+def test_sequence_cost_accounting():
+    seq = interleave.uniform_sequence("exact", 198)
+    cost = hwmodel.sequence_cost(seq)
+    assert cost["n_slots"] == 198
+    assert cost["pdp_benefit_pct"] == pytest.approx(0.0, abs=1e-9)
+    seq2 = interleave.uniform_sequence("nm_si", 198)
+    cost2 = hwmodel.sequence_cost(seq2)
+    # paper Sec. II-B: NMSI PDP benefit 24.02 %
+    assert cost2["pdp_benefit_pct"] == pytest.approx(23.9, abs=0.5)
+    # area counts distinct types only
+    assert cost2["area_um2"] == hwmodel.TABLE_I["nm_si"].area_um2
+
+
+def test_displacement_preserves_multiset():
+    rng = np.random.default_rng(0)
+    seq = np.asarray(interleave.alphabet_for_k(4), np.int32).repeat(50)[:198]
+    perm = interleave.random_displacement(seq, rng)
+    assert sorted(perm.tolist()) == sorted(seq.tolist())
+    assert not np.array_equal(perm, seq)
+
+
+def test_conv_slot_map_roundtrip():
+    seq = np.arange(198, dtype=np.int32) % 9
+    maps = interleave.conv_slot_map(seq, [10, 12])
+    assert maps[0].shape == (10, 3, 3)
+    assert maps[1].shape == (12, 3, 3)
+    flat = np.concatenate([m.ravel() for m in maps])
+    np.testing.assert_array_equal(flat, seq)
+
+
+def test_nsga_on_cnn_surrogate_inner_loop():
+    """End-to-end NSGA-II on the real CNN objective (tiny budget)."""
+    from repro.experiments import paper_cnn
+
+    params = paper_cnn.load_params()
+    res = paper_cnn.nsga_study(
+        params, k=2, n_images=64, pop_size=6, generations=2, seed=0, log=None)
+    assert len(res["front"]) >= 1
+    assert len(res["knee_genome"]) == 198
+    assert res["knee_objectives"][2] < 0.6  # accuracy > 40 %

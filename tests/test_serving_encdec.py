@@ -1,0 +1,92 @@
+"""Enc-dec decode parity, the continuous-batching server, AM numerics policies."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import amlinear, interleave, schemes
+from repro.launch import mesh as meshlib
+from repro.launch.serve import Request, Server
+from repro.models import encdec, registry as R
+
+
+def test_encdec_decode_matches_forward(rng):
+    """seamless: teacher-forced decoder logits == step-by-step decode with
+    self-attn cache + precomputed cross KV."""
+    cfg = dataclasses.replace(R.get("seamless-m4t-large-v2").smoke,
+                              dtype="float32")
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = R.demo_inputs(cfg, "train_4k", batch=B, seq=S)["batch"]
+    full = encdec.forward(params, batch, cfg)
+
+    memory = encdec.encode(params, batch["frames"], cfg)
+    ck, cv = encdec.precompute_cross_cache(params, memory, cfg)
+    cache = encdec.init_cache(cfg, B, S, S)
+    cache = dict(cache, cross_k=ck, cross_v=cv)
+    worst = 0.0
+    for t in range(S):
+        lg, cache = encdec.decode_step(params, cache, batch["tokens"][:, t],
+                                       jnp.int32(t), cfg)
+        worst = max(worst, float(jnp.max(jnp.abs(lg - full[:, t]))))
+    assert worst < 2e-3, worst
+
+
+def test_server_continuous_batching_deterministic():
+    cfg = R.get("xlstm-125m").smoke
+    out = []
+    for _ in range(2):
+        server = Server(cfg, meshlib.make_host_mesh(), slots=2, ctx=32, seed=3)
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                        max_new=4) for i in range(3)]
+        for r in reqs:
+            server.submit(r)
+        server.run(max_steps=40)
+        out.append([tuple(r.out) for r in reqs])
+        assert all(len(r.out) == 4 for r in reqs)
+    assert out[0] == out[1]  # greedy decode is deterministic
+
+
+def test_am_policies_and_registered_sequences(rng):
+    x = jnp.asarray(rng.standard_normal((4, 32)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    for policy in ("uniform:pm_csi", "rr:3"):
+        cfg = amlinear.NumericsConfig(mode="surrogate", policy=policy,
+                                      tile_k=8, tile_n=8)
+        y = amlinear.am_dense(x, w, cfg=cfg, key=key)
+        assert y.shape == (4, 16)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-3,
+                                   atol=1e-3)
+    # registered NSGA-II sequence
+    amlinear.register_sequence("test_seq", np.asarray([1, 3, 5, 7], np.int32))
+    cfg = amlinear.NumericsConfig(mode="surrogate", policy="seq:test_seq",
+                                  tile_k=8, tile_n=8)
+    y = amlinear.am_dense(x, w, cfg=cfg, key=key)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_bitexact_numerics_mode_matches_kernel(rng):
+    from repro.kernels import ref
+
+    x = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((16, 16)).astype(np.float32))
+    cfg = amlinear.NumericsConfig(mode="bitexact", policy="uniform:nm_si",
+                                  tile_k=16, tile_n=16)
+    y = amlinear.am_dense(x, w, cfg=cfg)
+    vids = jnp.full((16, 16), schemes.VARIANT_IDS["nm_si"], jnp.int32)
+    want = ref.am_matmul_bitexact_ref(x, w, vids)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=2e-6,
+                               atol=1e-6)
+
+
+def test_tile_map_shapes():
+    seq = np.arange(12, dtype=np.int32)
+    grid = interleave.tile_map(seq, k=300, n=500, tile_k=128, tile_n=128)
+    assert grid.shape == (3, 4)
+    with pytest.raises(ValueError):
+        interleave.tile_map(seq[:5], k=300, n=500)
