@@ -25,12 +25,16 @@ def render(path: pathlib.Path, title: str) -> None:
               f"{row['pdp_benefit_pct']:10.2f}")
     print(f"ranking: {' > '.join(res['ranking'])}")
     print(f"\n{'K':>3s} {'knee acc':>9s} {'knee PDP':>10s} {'front':>6s} "
-          f"{'disp max':>9s} {'disp mean':>10s}   [Fig 2b/4/5]")
+          f"{'disp max':>9s} {'disp mean':>10s} {'genomes/s':>10s} {'cache':>6s}"
+          f"   [Fig 2b/4/5]")
     for k, st in sorted(res["nsga"].items(), key=lambda t: int(t[0])):
         disp = res["displacement"][k]
+        es = st.get("eval_stats", {})
+        gps = f"{st['genomes_per_sec']:10.1f}" if "genomes_per_sec" in st else f"{'-':>10s}"
+        hit = f"{es['cache_hit_rate']:6.2f}" if es else f"{'-':>6s}"
         print(f"{k:>3s} {1 - st['knee_objectives'][2]:9.4f} "
               f"{st['knee_objectives'][1]:10.1f} {len(st['front']):6d} "
-              f"{disp['max']:9.4f} {disp['mean']:10.4f}")
+              f"{disp['max']:9.4f} {disp['mean']:10.4f} {gps} {hit}")
     print()
 
 

@@ -1,20 +1,31 @@
 """Benchmark aggregator: one section per paper table/figure + framework perf.
 
   PYTHONPATH=src python -m benchmarks.run
+
+Besides the printed sections, the NSGA-II search-throughput section persists
+machine-readable metrics to artifacts/BENCH_nsga2.json (genomes/sec,
+wall-clock per generation, memo-cache hit rate) so the perf trajectory is
+trackable across PRs.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import traceback
 
 from benchmarks import fig2_cnn, kernel_bench, roofline_summary, table1_hw, table2_errors
 
+ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
+BENCH_NSGA2 = ARTIFACTS / "BENCH_nsga2.json"
 
-def _section(title: str, fn) -> None:
+
+def _section(title: str, fn):
     print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
     try:
-        fn()
+        return fn()
     except Exception:
         traceback.print_exc()
+        return None
 
 
 def main() -> None:
@@ -23,6 +34,14 @@ def main() -> None:
     _section("Fig 2/4/5 — CNN: uniform AMs, NSGA-II interleaving, displacement",
              fig2_cnn.main)
     _section("Kernel micro-benchmarks (host)", kernel_bench.main)
+    nsga2_metrics = _section(
+        "NSGA-II search throughput — batched vs per-individual evaluation",
+        kernel_bench.nsga2_bench,
+    )
+    if nsga2_metrics is not None:
+        ARTIFACTS.mkdir(exist_ok=True)
+        BENCH_NSGA2.write_text(json.dumps(nsga2_metrics, indent=1))
+        print(f"wrote {BENCH_NSGA2}")
     _section("Roofline — dry-run derived, per (arch x shape x mesh)",
              roofline_summary.main)
 

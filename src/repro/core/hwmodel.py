@@ -82,6 +82,47 @@ def sequence_cost(variant_ids: np.ndarray) -> dict[str, float]:
     }
 
 
+def sequence_cost_batch(variant_ids: np.ndarray) -> dict[str, np.ndarray]:
+    """Vectorized `sequence_cost` over a population of sequences.
+
+    Args:
+      variant_ids: int array (P, L) of per-slot variant ids, one row per
+        genome (the NSGA-II population layout).
+    Returns:
+      dict with the same keys as `sequence_cost`, each a (P,) float64 array
+      (``n_slots`` is int). Per-row area counts distinct types only, exactly
+      matching the scalar accounting.
+    """
+    v = np.atleast_2d(np.asarray(variant_ids))
+    p, l = v.shape
+    pdp = PDP_PJ[v].sum(axis=1)
+    power = POWER_UW[v].sum(axis=1)
+    delay = DELAY_PS[v].sum(axis=1)
+    # present[p, t] = type t appears in row p; area sums distinct types.
+    present = np.zeros((p, len(schemes.VARIANTS)), bool)
+    np.put_along_axis(present, v, True, axis=1)
+    area = present @ AREA_UM2
+    pdp_exact = TABLE_I["exact"].pdp_pj * l
+    return {
+        "n_slots": np.full(p, l, int),
+        "pdp_pj": pdp,
+        "power_uw": power,
+        "delay_ps": delay,
+        "area_um2": area,
+        "pdp_benefit_pct": (pdp_exact - pdp) / pdp_exact * 100.0,
+    }
+
+
+def objectives_batch(variant_ids: np.ndarray) -> np.ndarray:
+    """(P, L) sequences -> (P, 2) hardware objective columns [area, pdp].
+
+    The NSGA-II hardware half of the paper's objective vector; the caller
+    appends the accuracy-loss column from the CNN evaluator.
+    """
+    cost = sequence_cost_batch(variant_ids)
+    return np.stack([cost["area_um2"], cost["pdp_pj"]], axis=1)
+
+
 def matmul_mult_count(m: int, k: int, n: int) -> int:
     """FP32 multiplications in an (m,k)x(k,n) matmul (for LM-scale accounting)."""
     return m * k * n

@@ -10,8 +10,14 @@ sequence but fitness ignores ordering — exactly the speedup the paper claims
 over per-slot NSGA-II. `experiments/paper_cnn.py` then probes positional
 sensitivity with random displacements (paper Fig. 5).
 
-Pure numpy; the (possibly expensive) objective function is user-supplied and
-may itself call jit'd JAX evaluation.
+Evaluation is population-batched: the optimizer hands the evaluator one
+(P, L) int32 array per generation (only the offspring — survivors keep their
+scores), so a jit'd/vmapped objective pays a single device round trip per
+generation instead of one per individual. Duplicate genomes are memoized by
+canonical key and never re-scored; with ``position_agnostic`` (opt-in, the
+paper's multiset fitness) permutations of one multiset also share a single
+evaluation. Pure numpy; the objective callable may itself call jit'd JAX
+evaluation.
 """
 from __future__ import annotations
 
@@ -27,6 +33,110 @@ class Individual:
     objectives: np.ndarray | None = None  # float64 vector, minimized
     rank: int = -1
     crowding: float = 0.0
+
+
+@dataclasses.dataclass
+class EvalStats:
+    """Telemetry from the batched, memoized evaluation pipeline."""
+
+    batch_calls: int = 0  # objectives_batch invocations (<= 1 + generations)
+    genomes_requested: int = 0  # genomes the optimizer asked to score
+    genomes_scored: int = 0  # genomes actually sent to the evaluator
+    cache_hits: int = 0  # requests satisfied from the memo cache
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache_hits / self.genomes_requested if self.genomes_requested else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "batch_calls": self.batch_calls,
+            "genomes_requested": self.genomes_requested,
+            "genomes_scored": self.genomes_scored,
+            "cache_hits": self.cache_hits,
+            "cache_hit_rate": self.cache_hit_rate,
+        }
+
+
+class BatchEvaluator:
+    """Memoizing, batching front-end over a population objective.
+
+    Wraps ``objectives_batch((P, L) int32) -> (P, M)`` so each call scores
+    only the genomes whose canonical key has never been seen — one device
+    call per generation, duplicates are free. With ``position_agnostic``
+    (the paper's multiset encoding) the canonical key is the sorted genome,
+    so permutations of one multiset share a single evaluation; leave it
+    False (the default) whenever the objective depends on slot order.
+    ``memoize=False`` disables caching entirely: every genome is scored on
+    every call (e.g. for objectives meant to get independent stochastic
+    draws) and nothing is retained.
+    """
+
+    def __init__(
+        self,
+        objectives_batch: Callable[[np.ndarray], np.ndarray],
+        *,
+        memoize: bool = True,
+        position_agnostic: bool = False,
+    ):
+        self._fn = objectives_batch
+        self._memoize = memoize
+        self._position_agnostic = position_agnostic
+        self._cache: dict[bytes, np.ndarray] = {}
+        self.stats = EvalStats()
+
+    def _key(self, genome: np.ndarray) -> bytes:
+        g = np.ascontiguousarray(genome, np.int32)
+        return np.sort(g).tobytes() if self._position_agnostic else g.tobytes()
+
+    def _score(self, batch: np.ndarray) -> np.ndarray:
+        objs = np.asarray(self._fn(batch), float)
+        if objs.shape[0] != batch.shape[0]:
+            raise ValueError(
+                f"objectives_batch returned {objs.shape[0]} rows for "
+                f"{batch.shape[0]} genomes"
+            )
+        self.stats.batch_calls += 1
+        self.stats.genomes_scored += batch.shape[0]
+        return objs
+
+    def __call__(self, genomes: Sequence[np.ndarray]) -> list[np.ndarray]:
+        """Score a list of genomes; returns per-genome objective vectors."""
+        genomes = [np.asarray(g, np.int32) for g in genomes]
+        self.stats.genomes_requested += len(genomes)
+
+        if not self._memoize:
+            return list(self._score(np.stack(genomes).astype(np.int32)))
+
+        keys = [self._key(g) for g in genomes]
+        todo_keys: list[bytes] = []
+        todo_genomes: list[np.ndarray] = []
+        pending: set[bytes] = set()
+        for g, k in zip(genomes, keys):
+            if k in self._cache or k in pending:
+                self.stats.cache_hits += 1
+                continue
+            pending.add(k)
+            todo_keys.append(k)
+            todo_genomes.append(g)
+
+        if todo_genomes:
+            objs = self._score(np.stack(todo_genomes).astype(np.int32))
+            for k, o in zip(todo_keys, objs):
+                self._cache[k] = o
+
+        return [self._cache[k] for k in keys]
+
+
+def per_individual_batch(
+    objective_fn: Callable[[np.ndarray], np.ndarray],
+) -> Callable[[np.ndarray], np.ndarray]:
+    """Compatibility shim: lift a genome->objectives function to a batch."""
+
+    def objectives_batch(genomes: np.ndarray) -> np.ndarray:
+        return np.stack([np.asarray(objective_fn(g), float) for g in genomes])
+
+    return objectives_batch
 
 
 def fast_non_dominated_sort(objs: np.ndarray) -> list[np.ndarray]:
@@ -95,47 +205,86 @@ def _mutate(g: np.ndarray, alphabet: np.ndarray, rate: float, rng: np.random.Gen
 
 
 def optimize(
-    objective_fn: Callable[[np.ndarray], np.ndarray],
-    genome_len: int,
-    alphabet: Sequence[int],
+    objective_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+    genome_len: int = 0,
+    alphabet: Sequence[int] = (),
     *,
+    objectives_batch: Callable[[np.ndarray], np.ndarray] | None = None,
     pop_size: int = 24,
     generations: int = 20,
     mutation_rate: float | None = None,
     seed: int = 0,
+    memoize: bool = True,
+    position_agnostic: bool = False,
+    stats: EvalStats | None = None,
     log: Callable[[str], None] | None = None,
 ) -> list[Individual]:
     """Run NSGA-II; returns the final population's first Pareto front.
 
     Args:
       objective_fn: genome (int32 (L,)) -> objective vector (M,), minimized.
+        Per-individual compatibility path; lifted to a batch internally.
       genome_len: L (198 for the paper's CNN).
       alphabet: allowed variant ids (the paper's top-K accuracy-ranked AMs).
+      objectives_batch: genomes (int32 (P, L)) -> objectives (P, M), minimized.
+        The batched fast path — one call per generation, covering exactly the
+        offspring genomes not already memoized. Exactly one of
+        ``objective_fn`` / ``objectives_batch`` must be given.
+      memoize: cache objective vectors by canonical genome key so duplicates
+        are never re-scored. False scores every genome on every request
+        (for objectives that must receive independent stochastic draws).
+      position_agnostic: canonicalize the memo key to the sorted multiset,
+        so permutations of one multiset share a single evaluation (the
+        paper's position-agnostic fitness — `experiments/paper_cnn.py` opts
+        in at calibrated noise). Default False: only exact duplicate
+        sequences are aliased, which is always safe.
+      stats: optional ``EvalStats`` instance populated with batch-call /
+        cache-hit telemetry.
     """
+    if (objective_fn is None) == (objectives_batch is None):
+        raise ValueError("provide exactly one of objective_fn / objectives_batch")
+    if genome_len <= 0:
+        raise ValueError(f"genome_len must be positive, got {genome_len}")
+    if not len(alphabet):
+        raise ValueError("alphabet must be non-empty")
+    if objectives_batch is None:
+        objectives_batch = per_individual_batch(objective_fn)
+
+    evaluator = BatchEvaluator(
+        objectives_batch, memoize=memoize, position_agnostic=position_agnostic
+    )
+    if stats is not None:
+        evaluator.stats = stats
+
     rng = np.random.default_rng(seed)
     alpha = np.asarray(list(alphabet), np.int32)
     rate = mutation_rate if mutation_rate is not None else 2.0 / genome_len
 
-    def new_ind(g):
-        return Individual(genome=g, objectives=np.asarray(objective_fn(g), float))
-
-    pop = [
-        new_ind(alpha[rng.integers(0, alpha.size, genome_len)])
-        for _ in range(pop_size)
+    genomes = [
+        alpha[rng.integers(0, alpha.size, genome_len)] for _ in range(pop_size)
     ]
     # Seed uniform-variant genomes so single-AM deployments are reachable.
     for i, v in enumerate(alpha[: max(1, pop_size // 8)]):
-        pop[i] = new_ind(np.full(genome_len, v, np.int32))
+        genomes[i] = np.full(genome_len, v, np.int32)
+    objs = evaluator(genomes)
+    pop = [Individual(genome=g, objectives=o) for g, o in zip(genomes, objs)]
     _rank_population(pop)
 
     for gen in range(generations):
-        children = []
-        while len(children) < pop_size:
+        child_genomes: list[np.ndarray] = []
+        while len(child_genomes) < pop_size:
             p1, p2 = _tournament(pop, rng), _tournament(pop, rng)
             c1, c2 = _crossover(p1.genome, p2.genome, rng)
-            children.append(new_ind(_mutate(c1, alpha, rate, rng)))
-            if len(children) < pop_size:
-                children.append(new_ind(_mutate(c2, alpha, rate, rng)))
+            child_genomes.append(_mutate(c1, alpha, rate, rng))
+            if len(child_genomes) < pop_size:
+                child_genomes.append(_mutate(c2, alpha, rate, rng))
+        # One batched evaluation per generation: offspring only — survivors
+        # carry their objectives, duplicates resolve from the memo cache.
+        child_objs = evaluator(child_genomes)
+        children = [
+            Individual(genome=g, objectives=o)
+            for g, o in zip(child_genomes, child_objs)
+        ]
         union = pop + children
         _rank_population(union)
         union.sort(key=lambda ind: (ind.rank, -ind.crowding))

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) on compressor + multiplier invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (CI installs it)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import compressors as C

@@ -26,6 +26,7 @@ def test_exact_tree_matches_integer_product(rng):
     np.testing.assert_array_equal((bits * w).sum(-1), a * b)
 
 
+@pytest.mark.slow
 def test_exact_multiplier_within_1ulp_of_rne(rng):
     a, b = errors.random_fp32_operands(5000, seed=7)
     got = fp32_mul.fp32_multiply_batch(a, b, "exact")
@@ -69,6 +70,7 @@ def test_variant_ids_roundtrip():
         np.testing.assert_array_equal(stack[i], schemes.scheme_map(v))
 
 
+@pytest.mark.slow
 def test_interleaved_multiply_matches_per_variant(rng):
     a = rng.standard_normal(64).astype(np.float32)
     b = rng.standard_normal(64).astype(np.float32)

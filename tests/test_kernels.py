@@ -8,6 +8,7 @@ from repro.core import schemes, surrogate
 from repro.kernels import ops, ref
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("m,k,n", [(8, 16, 16), (8, 32, 16), (16, 32, 32)])
 def test_bitexact_matmul_kernel_vs_ref(rng, m, k, n):
     x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
@@ -18,6 +19,7 @@ def test_bitexact_matmul_kernel_vs_ref(rng, m, k, n):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.slow
 def test_bitexact_matmul_kernel_padding(rng):
     # Non-multiple shapes exercise the pad+crop path.
     x = jnp.asarray(rng.standard_normal((5, 19)).astype(np.float32))
@@ -28,6 +30,7 @@ def test_bitexact_matmul_kernel_padding(rng):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-6)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("b,h,w,cin,f", [(2, 8, 8, 3, 4), (1, 10, 10, 3, 6)])
 def test_bitexact_conv_kernel_vs_ref(rng, b, h, w, cin, f):
     x = jnp.asarray(rng.standard_normal((b, h, w, cin)).astype(np.float32))
@@ -38,6 +41,7 @@ def test_bitexact_conv_kernel_vs_ref(rng, b, h, w, cin, f):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.slow
 def test_conv_exact_slots_match_lax_conv(rng):
     x = jnp.asarray(rng.standard_normal((2, 12, 12, 3)).astype(np.float32))
     wgt = jnp.asarray(rng.standard_normal((4, 3, 3, 3)).astype(np.float32))
@@ -72,6 +76,7 @@ def test_surrogate_matmul_kernel_nonaligned(rng):
                                atol=1e-4)
 
 
+@pytest.mark.slow
 def test_surrogate_moments_match_bitexact_statistics(rng):
     """Calibration: the surrogate's (mu, sigma) must reproduce the bit-exact
     AM's relative-error moments on standard-normal operands."""

@@ -33,6 +33,102 @@ def test_optimize_converges_on_toy_biobjective():
     assert len(fronts[0]) == len(front)
 
 
+def _toy_objective(g):
+    return np.array([float(g.sum()), float(((g - 2) ** 2).sum())])
+
+
+def test_batched_and_per_individual_fronts_identical():
+    """The per-individual shim and a native batch objective must drive the
+    optimizer through identical Pareto fronts on a fixed seed."""
+    kwargs = dict(genome_len=12, alphabet=[0, 1, 2, 3], pop_size=12,
+                  generations=8, seed=3)
+    front_i = nsga2.optimize(_toy_objective, **kwargs)
+    front_b = nsga2.optimize(
+        objectives_batch=lambda G: np.stack([_toy_objective(g) for g in G]),
+        **kwargs)
+    objs_i = sorted(tuple(ind.objectives) for ind in front_i)
+    objs_b = sorted(tuple(ind.objectives) for ind in front_b)
+    assert objs_i == objs_b
+    genomes_i = sorted(tuple(ind.genome.tolist()) for ind in front_i)
+    genomes_b = sorted(tuple(ind.genome.tolist()) for ind in front_b)
+    assert genomes_i == genomes_b
+
+
+def test_memo_cache_never_reevaluates_duplicates():
+    """The canonical-key cache must send each multiset to the evaluator at
+    most once across the whole run."""
+    seen: list[bytes] = []
+
+    def objectives_batch(genomes):
+        for g in genomes:
+            seen.append(np.sort(g).tobytes())
+        return np.stack([_toy_objective(g) for g in genomes])
+
+    stats = nsga2.EvalStats()
+    nsga2.optimize(
+        objectives_batch=objectives_batch, genome_len=6, alphabet=[0, 1],
+        pop_size=16, generations=10, seed=0, stats=stats,
+        position_agnostic=True)
+    assert len(seen) == len(set(seen)), "a multiset was re-scored"
+    assert stats.genomes_scored == len(seen)
+    assert stats.genomes_requested == stats.genomes_scored + stats.cache_hits
+    # Short genomes over a binary alphabet collide constantly; the cache
+    # must be doing real work here.
+    assert stats.cache_hits > 0
+    # One batched call for the init population + at most one per generation.
+    assert stats.batch_calls <= 11
+
+
+def test_batch_evaluator_positional_mode():
+    """position_agnostic=False keys the cache on the raw sequence."""
+    calls = []
+
+    def objectives_batch(genomes):
+        calls.extend(g.tobytes() for g in genomes)
+        return np.stack([[float(g[0]), float(g[-1])] for g in genomes])
+
+    ev = nsga2.BatchEvaluator(objectives_batch, position_agnostic=False)
+    a = np.array([0, 1, 2], np.int32)
+    b = np.array([2, 1, 0], np.int32)  # same multiset, different order
+    ev([a, b, a])
+    assert len(calls) == 2  # a scored once, b scored (not aliased to a)
+    assert ev.stats.cache_hits == 1
+
+
+def test_per_individual_batch_shim():
+    lifted = nsga2.per_individual_batch(_toy_objective)
+    G = np.array([[0, 1, 2], [2, 2, 2]], np.int32)
+    out = lifted(G)
+    np.testing.assert_allclose(out[0], _toy_objective(G[0]))
+    np.testing.assert_allclose(out[1], _toy_objective(G[1]))
+
+
+def test_optimize_requires_exactly_one_objective():
+    with pytest.raises(ValueError):
+        nsga2.optimize(genome_len=4, alphabet=[0, 1])
+    with pytest.raises(ValueError):
+        nsga2.optimize(
+            _toy_objective,
+            genome_len=4,
+            alphabet=[0, 1],
+            objectives_batch=lambda G: np.zeros((len(G), 2)),
+        )
+
+
+def test_sequence_cost_batch_matches_scalar():
+    rng = np.random.default_rng(7)
+    seqs = rng.integers(0, 9, (5, 198)).astype(np.int32)
+    batch = hwmodel.sequence_cost_batch(seqs)
+    for i, seq in enumerate(seqs):
+        scalar = hwmodel.sequence_cost(seq)
+        for key, val in scalar.items():
+            assert batch[key][i] == pytest.approx(val), key
+    # Hardware objective columns are [area, pdp].
+    objs = hwmodel.objectives_batch(seqs)
+    np.testing.assert_allclose(objs[:, 0], batch["area_um2"])
+    np.testing.assert_allclose(objs[:, 1], batch["pdp_pj"])
+
+
 def test_knee_point_prefers_balanced():
     ind = lambda o: nsga2.Individual(genome=np.zeros(1, np.int32),
                                      objectives=np.asarray(o, float))
@@ -81,3 +177,39 @@ def test_nsga_on_cnn_surrogate_inner_loop():
     assert len(res["front"]) >= 1
     assert len(res["knee_genome"]) == 198
     assert res["knee_objectives"][2] < 0.6  # accuracy > 40 %
+    # One batched device evaluation per generation (+1 for the init pop).
+    assert res["eval_stats"]["batch_calls"] <= 3
+    assert res["batched"] is True
+
+
+def test_cnn_batched_study_matches_per_individual_bitwise():
+    """Acceptance: batched vs per-individual fronts match bit-for-bit on a
+    seeded run of the real surrogate-CNN objective."""
+    from repro.experiments import paper_cnn
+
+    params = paper_cnn.load_params()
+    kwargs = dict(k=2, n_images=64, pop_size=6, generations=2, seed=0, log=None)
+    res_b = paper_cnn.nsga_study(params, batched=True, **kwargs)
+    res_i = paper_cnn.nsga_study(params, batched=False, **kwargs)
+    front_b = sorted(map(tuple, (f["objectives"] for f in res_b["front"])))
+    front_i = sorted(map(tuple, (f["objectives"] for f in res_i["front"])))
+    assert front_b == front_i  # exact float equality, not approx
+    assert res_b["knee_objectives"] == res_i["knee_objectives"]
+    # Same memoization telemetry on both paths.
+    assert res_b["eval_stats"]["cache_hits"] == res_i["eval_stats"]["cache_hits"]
+
+
+def test_cnn_batched_evaluator_batch_invariance():
+    """A genome's surrogate accuracy must not depend on batch composition."""
+    import jax
+
+    from repro.experiments import paper_cnn
+
+    params = paper_cnn.load_params()
+    ev = paper_cnn.make_batched_evaluator(params, 64)
+    rng = np.random.default_rng(5)
+    genomes = rng.integers(0, 9, (7, 198)).astype(np.int32)
+    key = jax.random.PRNGKey(11)
+    accs_all = ev(genomes, key)
+    accs_one = np.array([ev(g[None], key)[0] for g in genomes])
+    np.testing.assert_array_equal(accs_all, accs_one)

@@ -36,6 +36,7 @@ def test_surrogate_equals_exact_at_calibrated_noise(params):
     assert abs(acc_am - acc_exact) < 0.02
 
 
+@pytest.mark.slow
 def test_bitexact_cnn_close_to_exact(params):
     """Bit-level AM inference on a small batch: classification barely moves
     (errors are ~1e-7 relative)."""
@@ -76,6 +77,7 @@ def test_results_artifact_claims():
         assert disp["max"] >= acc_exact - 0.02
 
 
+@pytest.mark.slow
 def test_amplified_ablation_shows_interleaving_benefit():
     """Beyond-paper ablation: at amplified error magnitudes the interleaved
     variants must degrade more gracefully than single-direction NI designs."""

@@ -1,0 +1,106 @@
+"""Calibrated statistical surrogate: calibration moments + matmul identities.
+
+Referenced by core/surrogate.py's docstring: validates (1) the per-variant
+relative-error moments against the bit-exact emulator and (2) the matmul
+mean/variance identities
+
+    E[y]   = x @ (w * (1 + mu))
+    Var[y] = (x^2) @ (w^2 * sigma^2)
+
+that let the surrogate run as two MXU matmuls.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fp32_mul, schemes, surrogate
+from repro.kernels import ref
+
+
+def test_variant_stats_structure():
+    st = surrogate.variant_stats()
+    assert set(st) == set(schemes.VARIANTS)
+    assert st["exact"]["mre"] == 0.0 and st["exact"]["rmsre"] == 0.0
+    for v in schemes.AM_VARIANTS:
+        # RMSRE is a second moment: it bounds |MRE| and is small but nonzero.
+        assert st[v]["rmsre"] >= abs(st[v]["mre"])
+        assert 0.0 < st[v]["rmsre"] < 1e-5
+
+
+def test_moment_tables_consistent_with_stats():
+    st = surrogate.variant_stats()
+    mu, sg = surrogate.moment_tables()
+    assert mu.shape == sg.shape == (len(schemes.VARIANTS),)
+    for i, v in enumerate(schemes.VARIANTS):
+        assert mu[i] == pytest.approx(st[v]["mre"], rel=1e-5, abs=1e-12)
+        # sigma^2 = RMSRE^2 - MRE^2 (centered second moment).
+        want = np.sqrt(max(st[v]["rmsre"] ** 2 - st[v]["mre"] ** 2, 0.0))
+        assert sg[i] == pytest.approx(want, rel=1e-4, abs=1e-12)
+    assert mu[0] == 0.0 and sg[0] == 0.0  # exact multiplier
+
+
+def test_calibration_matches_bitexact_emulator_sample():
+    """Spot-check the stored moments against a fresh bit-exact sample."""
+    rng = np.random.default_rng(99)
+    n = 4096
+    a = rng.standard_normal(n).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    exact = fp32_mul.fp32_multiply_batch(a, b, "exact")
+    mu_t, sg_t = surrogate.moment_tables()
+    for v in ("pm_csi", "nm_ni"):
+        ap = fp32_mul.fp32_multiply_batch(a, b, v)
+        ok = np.isfinite(exact) & (exact != 0)
+        rel = (ap[ok].astype(np.float64) - exact[ok]) / exact[ok].astype(np.float64)
+        vid = schemes.VARIANT_IDS[v]
+        # Sample mean of n draws concentrates within ~5 sigma/sqrt(n).
+        tol = 5.0 * sg_t[vid] / np.sqrt(n) + 1e-9
+        assert abs(rel.mean() - mu_t[vid]) < tol
+        assert rel.std() == pytest.approx(sg_t[vid], rel=0.2, abs=1e-9)
+
+
+def test_matmul_mean_identity_zero_sigma(rng):
+    """With sigma = 0 the surrogate is exactly x @ (w * (1 + mu))."""
+    x = jnp.asarray(rng.standard_normal((6, 9)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((9, 5)).astype(np.float32))
+    mu = jnp.asarray(rng.uniform(-0.1, 0.1, (9, 5)).astype(np.float32))
+    sg = jnp.zeros((9, 5), jnp.float32)
+    got = surrogate.am_matmul_surrogate(x, w, mu, sg, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x @ (w * (1.0 + mu))), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_matmul_variance_identity_empirical(rng):
+    """Across independent draws, the surrogate's empirical moments match the
+    (mean, var) maps that am_surrogate_matmul_ref computes in closed form."""
+    x = jnp.asarray(rng.standard_normal((4, 8)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((8, 3)).astype(np.float32))
+    mu = jnp.asarray(rng.uniform(-0.05, 0.05, (8, 3)).astype(np.float32))
+    sg = jnp.asarray(rng.uniform(0.05, 0.2, (8, 3)).astype(np.float32))
+    mean_ref, var_ref = ref.am_surrogate_matmul_ref(x, w, mu, sg)
+    n = 400
+    draws = np.stack([
+        np.asarray(surrogate.am_matmul_surrogate(x, w, mu, sg, jax.random.PRNGKey(i)))
+        for i in range(n)
+    ])
+    emp_mean, emp_var = draws.mean(0), draws.var(0)
+    std = np.sqrt(np.asarray(var_ref))
+    # CLT bounds: mean to ~5 std/sqrt(n); variance to ~35 % relative.
+    np.testing.assert_allclose(emp_mean, np.asarray(mean_ref),
+                               atol=float(std.max()) * 5 / np.sqrt(n))
+    np.testing.assert_allclose(emp_var, np.asarray(var_ref), rtol=0.35, atol=1e-8)
+
+
+def test_uniform_matmul_matches_per_slot_maps(rng):
+    """am_matmul_uniform is the constant-map special case of the surrogate."""
+    x = jnp.asarray(rng.standard_normal((5, 7)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((7, 4)).astype(np.float32))
+    key = jax.random.PRNGKey(42)
+    vid = schemes.VARIANT_IDS["nm_si"]
+    mu_t, sg_t = surrogate.moment_tables()
+    mu = jnp.full(w.shape, mu_t[vid], jnp.float32)
+    sg = jnp.full(w.shape, sg_t[vid], jnp.float32)
+    a = surrogate.am_matmul_uniform(x, w, "nm_si", key)
+    b = surrogate.am_matmul_surrogate(x, w, mu, sg, key)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
