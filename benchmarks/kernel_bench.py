@@ -13,16 +13,88 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import surrogate
-from repro.kernels import ref
+from repro.core import engine, surrogate
 
 
-def _bench(fn, *args, iters: int = 5) -> float:
-    fn(*args)  # compile
+def _bench(fn, *args, iters: int = 5, warmup: int = 3) -> float:
+    for _ in range(warmup):  # compile + thread-pool/allocator warm-up
+        jax.block_until_ready(fn(*args))
     t0 = time.time()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.time() - t0) / iters * 1e6
+
+
+def engine_bench(m: int = 256, k: int = 256, n: int = 256, pop: int = 16,
+                 iters: int = 5, seed: int = 0) -> dict:
+    """AM engine throughput per backend (persisted to BENCH_engine.json).
+
+    Matmul rows are jitted closures over the engine call — the serving /
+    model configuration, where the engine traces inside the consumer's jit —
+    so they measure device throughput. The population-conv row times the
+    eager engine call (host-side per-genome moment folding included), the
+    per-generation cost the NSGA-II evaluator pays. Bit-exact backends are
+    timed on a reduced shape and reported with the extrapolation factor
+    (they cost ~10^2 integer ops per multiply by design).
+    """
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    vids = rng.integers(0, 9, (k, n)).astype(np.int32)
+    key = jax.random.PRNGKey(0)
+
+    out: dict = {"shape": [m, k, n], "iters": iters, "matmul_us": {}}
+    t_exact = _bench(jax.jit(lambda xx: engine.am_matmul(xx, w)), x, iters=iters)
+    out["matmul_us"]["exact"] = t_exact
+    for backend in ("surrogate_xla", "surrogate_fused"):
+        fn = jax.jit(lambda xx, b=backend: engine.am_matmul(
+            xx, w, vids, backend=b, key=key))
+        out["matmul_us"][backend] = _bench(fn, x, iters=iters)
+
+    # Bit-exact on a reduced shape, extrapolated to (m, k, n).
+    bm, bk, bn = 16, 32, 32
+    xb, wb = x[:bm, :bk], w[:bk, :bn]
+    vb = vids[:bk, :bn]
+    t_bit = _bench(
+        jax.jit(lambda xx: engine.am_matmul(xx, wb, vb, backend="bitexact_ref")),
+        xb, iters=2)
+    scale = (m * k * n) / (bm * bk * bn)
+    out["matmul_us"]["bitexact_ref"] = t_bit
+    out["bitexact_shape"] = [bm, bk, bn]
+    out["bitexact_extrapolation"] = scale
+    out["matmul_relative_cost"] = {
+        b: t / t_exact for b, t in out["matmul_us"].items() if b != "bitexact_ref"
+    }
+    out["matmul_relative_cost"]["bitexact_ref_extrapolated"] = \
+        t_bit * scale / t_exact
+
+    # Population conv: the fused backend's vectorized path vs per-genome
+    # surrogate_xla calls (the NSGA-II population-evaluation primitive).
+    xc = jnp.asarray(rng.standard_normal((8, 32, 32, 3)).astype(np.float32))
+    wc = jnp.asarray(rng.standard_normal((10, 3, 3, 3)).astype(np.float32))
+    genomes = rng.integers(0, 9, (pop, 10, 3, 3)).astype(np.int32)
+    t_fused = _bench(
+        lambda: engine.am_conv2d(xc, wc, genomes, backend="surrogate_fused",
+                                 key=key), iters=iters)
+    t_per = _bench(
+        lambda: [engine.am_conv2d(xc, wc, g, backend="surrogate_xla", key=key)
+                 for g in genomes], iters=max(1, iters // 2))
+    out["conv_population"] = {
+        "pop": pop,
+        "fused_us": t_fused,
+        "per_genome_xla_us": t_per,
+        "speedup": t_per / t_fused,
+        "fused_genomes_per_sec": pop / (t_fused * 1e-6),
+    }
+    print(f"engine_matmul_exact_{m}x{k}x{n},{t_exact:.1f},1.00x")
+    for b in ("surrogate_xla", "surrogate_fused"):
+        print(f"engine_matmul_{b}_{m}x{k}x{n},{out['matmul_us'][b]:.1f},"
+              f"{out['matmul_us'][b]/t_exact:.2f}x")
+    print(f"engine_matmul_bitexact_ref_{bm}x{bk}x{bn},{t_bit:.1f},"
+          f"{t_bit*scale/t_exact:.0f}x_extrapolated")
+    print(f"engine_conv_population_pop{pop},{t_fused:.1f},"
+          f"{out['conv_population']['speedup']:.2f}x_vs_per_genome")
+    return out
 
 
 def search_throughput(
@@ -127,27 +199,24 @@ def nsga2_bench(pop: int = 64, n_images: int = 64) -> dict:
 
 
 def main() -> None:
+    """Host micro-benchmarks, routed through the AM engine."""
     rng = np.random.default_rng(0)
     m = k = n = 256
     x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
     w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
-    mu = jnp.full((k, n), 1e-6, jnp.float32)
-    sg = jnp.full((k, n), 1e-7, jnp.float32)
+    vids = rng.integers(0, 9, (k, n)).astype(np.int32)
     key = jax.random.PRNGKey(0)
 
-    exact = jax.jit(lambda a, b: a @ b)
-    t_exact = _bench(exact, x, w)
+    t_exact = _bench(lambda: engine.am_matmul(x, w))
     print(f"matmul_exact_{m}x{k}x{n},{t_exact:.1f},1.00x")
 
-    surr = jax.jit(lambda a, b, mm, ss, kk: ref.am_surrogate_matmul_ref(a, b, mm, ss)[0])
-    t_surr = _bench(surr, x, w, mu, sg, key)
+    t_surr = _bench(lambda: engine.am_matmul(x, w, vids, backend="surrogate_xla",
+                                             key=key))
     print(f"matmul_am_surrogate_{m}x{k}x{n},{t_surr:.1f},{t_surr/t_exact:.2f}x")
 
-    vids = jnp.asarray(rng.integers(0, 9, (32, 32)), jnp.int32)
-    xb = x[:16, :32]
-    wb = w[:32, :32]
-    bit = jax.jit(lambda a, b, v: ref.am_matmul_bitexact_ref(a, b, v))
-    t_bit = _bench(bit, xb, wb, vids, iters=2)
+    xb, wb, vb = x[:16, :32], w[:32, :32], vids[:32, :32]
+    t_bit = _bench(lambda: engine.am_matmul(xb, wb, vb, backend="bitexact_ref"),
+                   iters=2)
     scale = (m * k * n) / (16 * 32 * 32)
     print(f"matmul_am_bitexact_16x32x32,{t_bit:.1f},"
           f"{t_bit*scale/t_exact:.0f}x_extrapolated")

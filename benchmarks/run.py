@@ -2,10 +2,11 @@
 
   PYTHONPATH=src python -m benchmarks.run
 
-Besides the printed sections, the NSGA-II search-throughput section persists
-machine-readable metrics to artifacts/BENCH_nsga2.json (genomes/sec,
-wall-clock per generation, memo-cache hit rate) so the perf trajectory is
-trackable across PRs.
+Besides the printed sections, machine-readable metrics persist under
+artifacts/ so the perf trajectory is trackable across PRs (CI uploads them
+as workflow artifacts): BENCH_nsga2.json (search throughput: genomes/sec,
+wall-clock per generation, memo-cache hit rate) and BENCH_engine.json
+(per-backend AM engine matmul/conv timings).
 """
 from __future__ import annotations
 
@@ -17,6 +18,7 @@ from benchmarks import fig2_cnn, kernel_bench, roofline_summary, table1_hw, tabl
 
 ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
 BENCH_NSGA2 = ARTIFACTS / "BENCH_nsga2.json"
+BENCH_ENGINE = ARTIFACTS / "BENCH_engine.json"
 
 
 def _section(title: str, fn):
@@ -34,6 +36,13 @@ def main() -> None:
     _section("Fig 2/4/5 — CNN: uniform AMs, NSGA-II interleaving, displacement",
              fig2_cnn.main)
     _section("Kernel micro-benchmarks (host)", kernel_bench.main)
+    engine_metrics = _section(
+        "AM engine — per-backend matmul/conv throughput", kernel_bench.engine_bench
+    )
+    if engine_metrics is not None:
+        ARTIFACTS.mkdir(exist_ok=True)
+        BENCH_ENGINE.write_text(json.dumps(engine_metrics, indent=1))
+        print(f"wrote {BENCH_ENGINE}")
     nsga2_metrics = _section(
         "NSGA-II search throughput — batched vs per-individual evaluation",
         kernel_bench.nsga2_bench,

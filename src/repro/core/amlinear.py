@@ -1,39 +1,47 @@
 """AM-aware linear layers: the paper's technique as a first-class numerics mode.
 
 Every weight-bearing matmul in the framework routes through `am_dense` /
-`am_einsum`, which dispatch on `NumericsConfig.mode`:
+`am_einsum`, thin clients of the unified AM engine (core/engine.py):
+`NumericsConfig` picks the engine backend and the tile->variant policy, and
+any contraction whose weight carries (contracting..., output...) dims is
+reshaped to a plain matmul so ALL engine backends (exact / bitexact_ref /
+bitexact_pallas / surrogate_xla / surrogate_fused) are reachable from every
+projection in the model zoo — including the serving path.
 
-  * "exact"     — native matmul in the model dtype (baseline / dry-run default)
-  * "surrogate" — calibrated statistical AM emulation (core/surrogate.py) with
-                  a per-weight-tile variant map (the interleaving technique at
-                  LM scale); costs ~2x matmul FLOPs, runs on the MXU.
-  * "bitexact"  — full bit-level emulation (core/fp32_mul.py); used for the
-                  paper CNN, kernel oracles and small validation runs only.
+  * mode "exact"     — native matmul in the model dtype (baseline default)
+  * mode "surrogate" — calibrated statistical AM emulation with a per-tile
+                       variant map (the interleaving technique at LM scale);
+                       ~2x matmul FLOPs, runs on the MXU. Backend defaults
+                       to surrogate_xla; set backend="surrogate_fused" for
+                       the fused one-pass kernel.
+  * mode "bitexact"  — full bit-level emulation; paper CNN, kernel oracles
+                       and small validation runs only. Backend defaults to
+                       bitexact_ref.
 
-Tile->variant assignment policies:
+Tile->variant assignment policies (resolved by the engine canonicalizer):
   "uniform:<variant>"  — one AM everywhere (paper Fig. 2a setting)
   "rr:<K>"             — round-robin over the top-K accuracy-ranked alphabet
-                         (the paper's interleaving insight as a static policy)
   "seq:<name>"         — a named NSGA-II-optimized sequence registered at
                          runtime via `register_sequence`.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fp32_mul, interleave, schemes, surrogate
+from repro.core import engine
 
-_REGISTERED_SEQUENCES: dict[str, np.ndarray] = {}
+# Optimized sequences live in the engine registry; re-exported for callers.
+register_sequence = engine.register_sequence
 
-
-def register_sequence(name: str, variant_ids: np.ndarray) -> None:
-    """Register an optimized flat tile sequence under `seq:<name>`."""
-    _REGISTERED_SEQUENCES[name] = np.asarray(variant_ids, np.int32)
+_MODE_DEFAULT_BACKEND = {
+    "exact": "exact",
+    "surrogate": "surrogate_xla",
+    "bitexact": "bitexact_ref",
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,94 +50,106 @@ class NumericsConfig:
     policy: str = "uniform:pm_csi"
     tile_k: int = 128
     tile_n: int = 128
+    backend: str | None = None  # engine backend override (None = mode default)
 
     def __post_init__(self):
-        assert self.mode in ("exact", "surrogate", "bitexact"), self.mode
+        assert self.mode in _MODE_DEFAULT_BACKEND, self.mode
+        if self.backend is not None:
+            assert self.backend in engine.BACKEND_NAMES, self.backend
+
+    @property
+    def engine_backend(self) -> str:
+        return self.backend or _MODE_DEFAULT_BACKEND[self.mode]
+
+    @classmethod
+    def for_backend(cls, backend: str, policy: str = "uniform:pm_csi",
+                    **kw) -> "NumericsConfig":
+        """Config from an engine backend name (the serve --am-backend path)."""
+        mode = ("exact" if backend == "exact"
+                else "bitexact" if backend.startswith("bitexact")
+                else "surrogate")
+        return cls(mode=mode, policy=policy, backend=backend, **kw)
 
 
 EXACT = NumericsConfig(mode="exact")
 
 
-@functools.lru_cache(maxsize=4096)
-def _tile_grid(policy: str, gk: int, gn: int) -> np.ndarray:
-    """Deterministic (gk, gn) variant-id grid for a policy."""
-    n = gk * gn
-    if policy.startswith("uniform:"):
-        seq = interleave.uniform_sequence(policy.split(":", 1)[1], n)
-    elif policy.startswith("rr:"):
-        k = int(policy.split(":", 1)[1])
-        alpha = np.asarray(interleave.alphabet_for_k(k), np.int32)
-        seq = alpha[np.arange(n) % k]
-    elif policy.startswith("seq:"):
-        seq = _REGISTERED_SEQUENCES[policy.split(":", 1)[1]]
-        if seq.size < n:  # tile the registered sequence to cover the grid
-            seq = np.resize(seq, n)
-        seq = seq[:n]
-    else:
-        raise ValueError(f"unknown numerics policy {policy!r}")
-    return seq.reshape(gk, gn)
-
-
-def _moment_maps(cfg: NumericsConfig, k: int, n: int):
-    gk = -(-k // cfg.tile_k)
-    gn = -(-n // cfg.tile_n)
-    grid = _tile_grid(cfg.policy, gk, gn)
-    return surrogate.tile_moments(grid, k, n, cfg.tile_k, cfg.tile_n)
+def _engine_for(cfg: NumericsConfig) -> engine.AMEngine:
+    return engine.AMEngine(backend=cfg.engine_backend, tile_k=cfg.tile_k,
+                           tile_n=cfg.tile_n)
 
 
 def am_dense(x, w, *, cfg: NumericsConfig = EXACT, key=None):
     """x (..., K) @ w (K, N) under the configured numerics."""
     if cfg.mode == "exact":
         return x @ w
-    if cfg.mode == "surrogate":
-        assert key is not None, "surrogate numerics needs a PRNG key"
-        mu, sg = _moment_maps(cfg, w.shape[0], w.shape[1])
-        y = surrogate.am_matmul_surrogate(
-            x.astype(jnp.float32), w.astype(jnp.float32), mu, sg, key
-        )
-        return y.astype(x.dtype)
-    return bitexact_matmul(x, w, cfg)
+    slot_map = cfg.policy
+    y = _engine_for(cfg).matmul(x, w, slot_map, key=key)
+    return y.astype(x.dtype)
+
+
+def _dense_form(spec: str, x_ndim: int, w_ndim: int):
+    """Parse an einsum spec into matmul form: w dims = (contract..., out...),
+    x ends with the contract dims, out = x_lead + out dims. Returns
+    (n_contract, n_out) or None when the spec doesn't reduce to a matmul
+    (e.g. batch dims in w, repeated labels, transposed contractions)."""
+    try:
+        ins, out = spec.replace(" ", "").split("->")
+        xs, ws = ins.split(",")
+    except ValueError:
+        return None
+    if len(xs) != x_ndim or len(ws) != w_ndim:
+        return None
+    if len(set(xs)) != len(xs) or len(set(ws)) != len(ws):
+        return None
+    c = "".join(l for l in ws if l in xs and l not in out)
+    o = ws[len(c):]
+    if not c or ws != c + o:
+        return None
+    if not xs.endswith(c):
+        return None
+    lead = xs[: len(xs) - len(c)]
+    if out != lead + o or any(l in xs for l in o):
+        return None
+    return len(c), len(o)
 
 
 def am_einsum(spec: str, x, w, *, cfg: NumericsConfig = EXACT, key=None):
-    """Einsum with AM numerics; the variant tile map covers w's last two dims.
+    """Einsum with AM numerics.
 
-    Supports any contraction where `w` carries the contracting + output dims
-    (all projection/expert matmuls in the model zoo).
+    Contractions of the form (lead..., c...) x (c..., o...) -> (lead..., o...)
+    — every projection matmul in the model zoo — reshape to `am_dense`, so
+    all engine backends apply; the variant tile map then covers the
+    (prod(contract), prod(out)) matmul grid, the grid the hardware slots
+    actually tile. (Before the engine rewire the map covered w's last two
+    dims regardless of their contract/output role — non-uniform policies
+    assign variants to different weight elements than that legacy layout.)
+    Other specs (e.g. batched expert weights) keep a surrogate
+    moment-einsum fallback whose map covers w's last two dims.
     """
     if cfg.mode == "exact":
         return jnp.einsum(spec, x, w)
+    form = _dense_form(spec, np.ndim(x), np.ndim(w))
+    if form is not None:
+        n_c, n_o = form
+        k = int(np.prod(w.shape[:n_c]))
+        n = int(np.prod(w.shape[n_c:]))
+        lead = x.shape[: x.ndim - n_c]
+        y = am_dense(x.reshape(lead + (k,)), w.reshape(k, n), cfg=cfg, key=key)
+        return y.reshape(lead + w.shape[n_c:])
     if cfg.mode == "surrogate":
         assert key is not None
         k, n = w.shape[-2], w.shape[-1]
-        mu, sg = _moment_maps(cfg, k, n)
+        cmap = engine.canonical_matmul_map(cfg.policy, k, n, tile_k=cfg.tile_k,
+                                           tile_n=cfg.tile_n)
+        mu, sg = engine.moment_maps(cmap.vids)
+        mu, sg = jnp.asarray(mu), jnp.asarray(sg)
         xf = x.astype(jnp.float32)
         wf = w.astype(jnp.float32)
         mean = jnp.einsum(spec, xf, wf * (1.0 + mu))
         var = jnp.einsum(spec, xf * xf, (wf * wf) * (sg * sg))
         z = jax.random.normal(key, mean.shape, dtype=mean.dtype)
         return (mean + z * jnp.sqrt(jnp.maximum(var, 0.0))).astype(x.dtype)
-    raise NotImplementedError("bitexact einsum: use am_dense on 2-D slices")
-
-
-def bitexact_matmul(x, w, cfg: NumericsConfig):
-    """Bit-level AM matmul (small shapes only: O(MKN) emulated multiplies)."""
-    k, n = w.shape
-    gk = -(-k // cfg.tile_k)
-    gn = -(-n // cfg.tile_n)
-    grid = _tile_grid(cfg.policy, gk, gn)
-    vk = np.repeat(np.repeat(grid, cfg.tile_k, 0), cfg.tile_n, 1)[:k, :n]
-    vids = jnp.asarray(vk, jnp.int32)
-
-    x2 = x.reshape(-1, k).astype(jnp.float32)
-
-    def row(xr):
-        prods = fp32_mul.fp32_multiply_interleaved(
-            jnp.broadcast_to(xr[:, None], (k, n)),
-            w.astype(jnp.float32),
-            vids,
-        )
-        return jnp.sum(prods, axis=0)
-
-    y = jax.lax.map(row, x2)
-    return y.reshape(x.shape[:-1] + (n,)).astype(x.dtype)
+    raise NotImplementedError(
+        f"bitexact einsum for non-matmul spec {spec!r}: use am_dense on 2-D slices"
+    )

@@ -1,0 +1,700 @@
+"""Unified AM numerics engine: one backend-dispatched matmul/conv2d API.
+
+Every consumer of the paper's interleaved approximate-FP32 numerics — the
+CNN model, the NSGA-II population evaluator, the LM-scale projections, the
+serving loop and the benchmarks — routes through two primitives:
+
+    am_matmul(x, w, slot_map, *, backend=..., key=...)
+    am_conv2d(x, w, slot_map, *, backend=..., key=...)
+
+`slot_map` is anything the canonicalizer understands (None, a policy string,
+a flat variant sequence, a tile grid, a full per-slot map — each optionally
+with a leading **population axis** (P, ...) of genomes), and `backend` picks
+the fidelity/cost point:
+
+  backend           fidelity                 intended use
+  ----------------  -----------------------  --------------------------------
+  exact             reference f32            baselines; slot_map ignored
+  bitexact_ref      bit-level AM emulation   ground truth, final scoring
+                    (pure jnp oracle)        (small shapes: ~10^2 ops/multiply)
+  bitexact_pallas   bit-level AM emulation   on-device validation at CNN scale
+                    (Pallas kernel)          (interpret-mode off TPU)
+  surrogate_xla     calibrated moments,      general AM inference; moment maps
+                    plain XLA matmul/conv    materialized per call
+  surrogate_fused   calibrated moments,      NSGA-II search + LM-scale shapes;
+                    fused one-pass kernel    population-vectorized, blocked
+                                             channel-major GEMM on CPU, fused
+                                             Pallas kernel on TPU
+
+`backend=None` auto-selects: exact when there is no (non-trivial) slot map,
+bit-exact for small shapes (final scoring), fused surrogate otherwise.
+
+Population axis: a slot_map of shape (P, ...) scores P genomes in one call
+(the NSGA-II generation batch, Pareto re-scoring, displacement studies);
+outputs gain a leading P axis. Surrogate noise uses common random numbers —
+one z per output position, shared across the population — so genome
+comparisons are made under the same noise realization and a population call
+matches the corresponding per-genome calls. `x` may also carry the
+population axis (layer 2 of a population-evaluated CNN).
+
+The canonicalization (sequence -> per-slot variant ids -> moment/scheme
+maps) is shared by all backends, lifted from core/interleave.py +
+core/schemes.py; the VMEM-aware block-size chooser shared by the Pallas
+backends lives in kernels/ops.py (`choose_block`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import interleave, schemes, surrogate
+
+BACKEND_NAMES = (
+    "exact",
+    "bitexact_ref",
+    "bitexact_pallas",
+    "surrogate_xla",
+    "surrogate_fused",
+)
+
+# Auto-selector threshold: emulated multiplies per bit-exact pass we are
+# willing to pay for ground-truth numerics (~10^2 integer ops per multiply).
+BITEXACT_AUTO_MAX_MULS = 1 << 14
+
+_REGISTERED_SEQUENCES: dict[str, np.ndarray] = {}
+
+
+def register_sequence(name: str, variant_ids) -> None:
+    """Register an optimized flat variant sequence under policy `seq:<name>`."""
+    _REGISTERED_SEQUENCES[name] = np.asarray(variant_ids, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Slot-map canonicalization (shared by every backend)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=4096)
+def _static_policy_sequence(policy: str, n: int) -> np.ndarray:
+    if policy.startswith("uniform:"):
+        return interleave.uniform_sequence(policy.split(":", 1)[1], n)
+    if policy.startswith("rr:"):
+        k = int(policy.split(":", 1)[1])
+        alpha = np.asarray(interleave.alphabet_for_k(k), np.int32)
+        return alpha[np.arange(n) % k]
+    raise ValueError(f"unknown numerics policy {policy!r}")
+
+
+def _policy_sequence(policy: str, n: int) -> np.ndarray:
+    """Deterministic flat variant-id sequence of length n for a policy string.
+
+    `seq:<name>` policies resolve against the runtime registry (uncached so
+    re-registering a name takes effect); uniform/rr policies are cached.
+    """
+    if policy.startswith("seq:"):
+        seq = _REGISTERED_SEQUENCES[policy.split(":", 1)[1]]
+        if seq.size < n:  # tile the registered sequence to cover the grid
+            seq = np.resize(seq, n)
+        return seq[:n].copy()
+    return _static_policy_sequence(policy, n)
+
+
+@dataclasses.dataclass(frozen=True)
+class CanonicalMap:
+    """Per-slot variant ids in the shape a backend consumes.
+
+    vids: (K, N) for matmul / (F, kh, kw) for conv, with a leading P axis
+    when `pop` is set. Always int32, always a concrete np.ndarray, so jitted
+    consumers can fold maps into weights on the host.
+    """
+
+    vids: np.ndarray
+    pop: bool
+
+    @property
+    def population(self) -> int:
+        return self.vids.shape[0] if self.pop else 1
+
+    def per_genome(self):
+        """Iterate single-genome maps (pop=False each)."""
+        if not self.pop:
+            yield self
+        else:
+            for p in range(self.vids.shape[0]):
+                yield CanonicalMap(self.vids[p], False)
+
+
+def canonical_matmul_map(
+    slot_map, k: int, n: int, *, tile_k: int = 128, tile_n: int = 128
+) -> CanonicalMap:
+    """Canonicalize any matmul slot-map spelling to per-(K, N) variant ids.
+
+    Accepted: None (exact), a policy string, a full (K, N) map, a (gk, gn)
+    tile grid, a flat gk*gn sequence — each with an optional leading
+    population axis. A 2-D array matching (K, N) or (gk, gn) is read as a
+    single map; use an explicit 3-D (P, gk, gn) for populations that would
+    collide with those shapes.
+    """
+    gk, gn = -(-k // tile_k), -(-n // tile_n)
+    if slot_map is None:
+        return CanonicalMap(np.zeros((k, n), np.int32), False)
+    if isinstance(slot_map, str):
+        slot_map = _policy_sequence(slot_map, gk * gn)
+    arr = np.asarray(slot_map, np.int32)
+
+    def expand(a: np.ndarray) -> np.ndarray:
+        if a.ndim == 1:
+            if a.size != gk * gn:
+                raise ValueError(
+                    f"flat matmul sequence length {a.size} != tile grid {gk}x{gn}"
+                )
+            a = a.reshape(gk, gn)
+        if a.shape == (k, n):
+            return a
+        if a.shape == (gk, gn):
+            return np.repeat(np.repeat(a, tile_k, 0), tile_n, 1)[:k, :n]
+        raise ValueError(
+            f"matmul slot map shape {a.shape} matches neither full ({k}, {n}) "
+            f"nor tile grid ({gk}, {gn})"
+        )
+
+    single = arr.ndim == 1 or (
+        arr.ndim == 2 and (arr.shape == (k, n) or arr.shape == (gk, gn))
+    )
+    if single:
+        return CanonicalMap(expand(arr), False)
+    return CanonicalMap(np.stack([expand(a) for a in arr]), True)
+
+
+def canonical_conv_map(slot_map, f: int, kh: int, kw: int) -> CanonicalMap:
+    """Canonicalize any conv slot-map spelling to per-(F, kh, kw) variant ids.
+
+    Accepted: None (exact), a policy string, a (F, kh, kw) map, a flat
+    F*kh*kw sequence — each with an optional leading population axis.
+    """
+    n = f * kh * kw
+    if slot_map is None:
+        return CanonicalMap(np.zeros((f, kh, kw), np.int32), False)
+    if isinstance(slot_map, str):
+        slot_map = _policy_sequence(slot_map, n)
+    arr = np.asarray(slot_map, np.int32)
+    if arr.ndim == 1:
+        if arr.size != n:
+            raise ValueError(f"flat conv sequence length {arr.size} != {n} slots")
+        return CanonicalMap(arr.reshape(f, kh, kw), False)
+    if arr.shape == (f, kh, kw):
+        return CanonicalMap(arr, False)
+    if arr.ndim == 2 and arr.shape[1] == n:
+        return CanonicalMap(arr.reshape(-1, f, kh, kw), True)
+    if arr.ndim == 4 and arr.shape[1:] == (f, kh, kw):
+        return CanonicalMap(arr, True)
+    raise ValueError(
+        f"conv slot map shape {arr.shape} does not fit (F,kh,kw)=({f},{kh},{kw})"
+    )
+
+
+def scheme_stack() -> np.ndarray:
+    """(n_variants, 3, 48) compressor-code stack shared by bit-exact backends."""
+    return schemes.scheme_stack()
+
+
+def moment_maps(vids: np.ndarray, noise_scale: float = 1.0):
+    """Gather per-slot (mu, sigma) moment maps for canonical variant ids."""
+    mu_t, sg_t = surrogate.moment_tables()
+    mu_t = (mu_t * noise_scale).astype(np.float32)
+    sg_t = (sg_t * noise_scale).astype(np.float32)
+    return mu_t[vids], sg_t[vids]
+
+
+# --- conv GEMM weight folding (the search/population hot path) -------------
+#
+# The fused surrogate conv backend computes each conv as an im2col GEMM with
+# the per-slot moments folded into per-genome weight matrices on the host —
+# the channel-major (F, K) @ (K, pixels) orientation that is fastest on this
+# 2-core box, and the formulation the population evaluator compiles once per
+# shape. Two column layouts exist because image patches are cheapest to
+# build tap-major while pooled-activation patches (layer 2 of the paper CNN)
+# are cheapest channel-major.
+
+
+def fold_conv_gemm_weights(
+    w, maps: CanonicalMap, *, noise_scale: float = 1.0, layout: str = "tap_major"
+):
+    """Fold per-slot moments into (P?, F, kh*kw*Cin) mean/var GEMM weights.
+
+    w: (F, kh, kw, Cin). Column order matches the corresponding patch
+    layout: "tap_major" — (tap, channel) with channel fastest;
+    "channel_major" — (channel, tap) with tap fastest.
+    Returns (w_mean, w_var) float32 arrays, population axis iff maps.pop.
+    Host (np) weights fold on the host — bitwise-stable, the population
+    evaluator's contract; traced weights (w as a jit argument) fold in-graph.
+    """
+    if isinstance(w, jax.core.Tracer):
+        w = w.astype(jnp.float32)
+    else:
+        w = np.asarray(w, np.float32)
+    f, kh, kw, cin = w.shape
+    vids = maps.vids if maps.pop else maps.vids[None]
+    taps = vids.reshape(vids.shape[0], f, kh * kw)
+    mu, sg = moment_maps(taps, noise_scale)
+    if layout == "tap_major":
+        wf = w.reshape(f, kh * kw * cin)
+        mu_c = np.repeat(mu, cin, axis=2)
+        sg_c = np.repeat(sg, cin, axis=2)
+    elif layout == "channel_major":
+        wf = w.transpose(0, 3, 1, 2).reshape(f, cin * kh * kw)
+        mu_c = np.tile(mu, (1, 1, cin))
+        sg_c = np.tile(sg, (1, 1, cin))
+    else:
+        raise ValueError(f"unknown layout {layout!r}")
+    wm = wf[None] * (1.0 + mu_c)
+    wv = (wf * wf)[None] * (sg_c * sg_c)
+    if not maps.pop:
+        wm, wv = wm[0], wv[0]
+    return wm.astype(np.float32), wv.astype(np.float32)
+
+
+def conv_patch_matrix(x: np.ndarray, kh: int, kw: int) -> np.ndarray:
+    """Tap-major im2col of images: (B, H, W, C) -> (kh*kw*C, B, ho*wo).
+
+    Row order matches fold_conv_gemm_weights(layout="tap_major"): taps scan
+    (ky, kx) row-major with the channel fastest.
+    """
+    b, h, wd, c = x.shape
+    ho, wo = h - kh + 1, wd - kw + 1
+    taps = [
+        x[:, i : i + ho, j : j + wo, :] for i in range(kh) for j in range(kw)
+    ]  # kh*kw x (B, ho, wo, C)
+    px = np.stack(taps, 0).transpose(0, 4, 1, 2, 3)  # (taps, C, B, ho, wo)
+    return px.reshape(kh * kw * c, b, ho * wo)
+
+
+def population_blocks(p: int, block: int) -> int:
+    """Number of `block`-genome blocks for a population of p, padded to a
+    power of two so per-block GEMM shapes are fixed: a genome's score is
+    bitwise identical whether evaluated alone or inside any batch, and
+    compilation cost is O(log P) distinct shapes."""
+    return 1 << (max(1, -(-p // block)) - 1).bit_length()
+
+
+def pad_population(arr: np.ndarray, block: int) -> np.ndarray:
+    """Pad genomes (P, ...) to population_blocks(P) * block rows with copies
+    of row 0 (padded scores are discarded by the caller)."""
+    p = arr.shape[0]
+    p_pad = population_blocks(p, block) * block
+    if p_pad == p:
+        return arr
+    return np.concatenate([arr, np.repeat(arr[:1], p_pad - p, axis=0)])
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    name: str
+    fidelity: str  # "exact" | "bit" | "moments"
+    matmul: Callable
+    conv2d: Callable
+
+
+_BACKENDS: dict[str, BackendSpec] = {}
+
+
+def register_backend(name: str, fidelity: str, *, matmul: Callable, conv2d: Callable):
+    _BACKENDS[name] = BackendSpec(name, fidelity, matmul, conv2d)
+
+
+def get_backend(name: str) -> BackendSpec:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(f"unknown AM backend {name!r}; have {sorted(_BACKENDS)}")
+
+
+def backends() -> tuple[str, ...]:
+    return tuple(_BACKENDS)
+
+
+def select_backend(kind: str, *, has_map: bool, work: int) -> str:
+    """Automatic backend choice: bit-exact ground truth for small shapes
+    (final scoring, validation); the fused surrogate for search- and
+    LM-scale work. `work` is scalar multiplies for the whole call,
+    including the population axis."""
+    del kind
+    if not has_map:
+        return "exact"
+    if work <= BITEXACT_AUTO_MAX_MULS:
+        return "bitexact_ref"
+    return "surrogate_fused"
+
+
+# ---------------------------------------------------------------------------
+# Shared evaluation plumbing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Ctx:
+    """Per-call context handed to backend implementations."""
+
+    engine: "AMEngine"
+    block: Any
+    return_moments: bool
+    base_ndim: int  # rank of a single-genome x (2 matmul, 4 conv)
+    pop_x: bool  # x carries a leading population axis
+
+    @property
+    def noise_scale(self) -> float:
+        return self.engine.noise_scale
+
+
+def _require_key(key, backend: str):
+    if key is None:
+        raise ValueError(f"backend {backend!r} draws noise and needs a PRNG key")
+
+
+def _noise(key, mean, var):
+    z = jax.random.normal(key, mean.shape, mean.dtype)
+    return mean + z * jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def _map_pop(ctx: _Ctx, cmap: CanonicalMap, fn, x):
+    """Apply fn(x_slice, single_map) over the population axis, stacking.
+
+    This per-genome path is the ground truth the vectorized fused backend
+    is tested against; bit-exact and plain-XLA surrogate backends take it
+    directly (population sizes there are small by construction).
+    """
+    if not cmap.pop:
+        return fn(x, cmap)
+    outs = [fn(x[p] if ctx.pop_x else x, m) for p, m in enumerate(cmap.per_genome())]
+    if ctx.return_moments:
+        means, vars_ = zip(*outs)
+        return jnp.stack(means), jnp.stack(vars_)
+    return jnp.stack(outs)
+
+
+def _broadcast_pop(ctx: _Ctx, cmap: CanonicalMap, out):
+    """Give map-ignoring backends (exact) the population axis the API promises."""
+    if not cmap.pop or ctx.pop_x:
+        return out
+    if ctx.return_moments:
+        mean, var = out
+        shape = (cmap.population,)
+        return (jnp.broadcast_to(mean[None], shape + mean.shape),
+                jnp.broadcast_to(var[None], shape + var.shape))
+    return jnp.broadcast_to(out[None], (cmap.population,) + out.shape)
+
+
+def _moment_matmul(x, w, mu, sg):
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    mean = xf @ (wf * (1.0 + mu))
+    var = (xf * xf) @ ((wf * wf) * (sg * sg))
+    return mean, var
+
+
+# ---------------------------------------------------------------------------
+# Backend implementations
+# ---------------------------------------------------------------------------
+
+
+def _exact_matmul(ctx, x, w, cmap, key):
+    del key
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32)  # batches over pop-x
+    if ctx.return_moments:
+        y = (y, jnp.zeros_like(y))
+    return _broadcast_pop(ctx, cmap, y)
+
+
+def _exact_conv2d(ctx, x, w, cmap, key):
+    from repro.kernels import ref
+
+    del key
+    if ctx.pop_x:
+        p = x.shape[0]
+        y = ref.conv2d_exact_ref(x.reshape((-1,) + x.shape[2:]), w)
+        y = y.reshape((p, -1) + y.shape[1:])
+    else:
+        y = ref.conv2d_exact_ref(x, w)
+    if ctx.return_moments:
+        y = (y, jnp.zeros_like(y))
+    return _broadcast_pop(ctx, cmap, y)
+
+
+def _with_moments(ctx, y):
+    """Deterministic backends have a point distribution: mean = y, var = 0,
+    keeping the return_moments contract total across all backends."""
+    return (y, jnp.zeros_like(y)) if ctx.return_moments else y
+
+
+def _bitexact_matmul_ref(ctx, x, w, cmap, key):
+    from repro.kernels import ref
+
+    del key
+    return _map_pop(
+        ctx, cmap,
+        lambda xs, m: _with_moments(ctx, ref.am_matmul_bitexact_ref(xs, w, m.vids)),
+        x,
+    )
+
+
+def _bitexact_matmul_pallas(ctx, x, w, cmap, key):
+    from repro.kernels import ops
+
+    del key
+    return _map_pop(
+        ctx, cmap,
+        lambda xs, m: _with_moments(
+            ctx, ops.am_matmul_bitexact(xs, w, m.vids, block=ctx.block)),
+        x,
+    )
+
+
+def _bitexact_conv2d_ref(ctx, x, w, cmap, key):
+    from repro.kernels import ref
+
+    del key
+    return _map_pop(
+        ctx, cmap,
+        lambda xs, m: _with_moments(ctx, ref.am_conv2d_bitexact_ref(xs, w, m.vids)),
+        x,
+    )
+
+
+def _bitexact_conv2d_pallas(ctx, x, w, cmap, key):
+    from repro.kernels import ops
+
+    del key
+    return _map_pop(
+        ctx, cmap,
+        lambda xs, m: _with_moments(ctx, ops.am_conv2d_bitexact(xs, w, m.vids)),
+        x,
+    )
+
+
+def _surrogate_matmul_xla(ctx, x, w, cmap, key):
+    _require_key(key, "surrogate_xla")
+
+    def one(xs, m):
+        mu, sg = moment_maps(m.vids, ctx.noise_scale)
+        mean, var = _moment_matmul(xs, w, jnp.asarray(mu), jnp.asarray(sg))
+        if ctx.return_moments:
+            return mean, var
+        return _noise(key, mean, var)  # same key across genomes: CRN
+
+    return _map_pop(ctx, cmap, one, x)
+
+
+def _surrogate_matmul_fused(ctx, x, w, cmap, key):
+    from repro.kernels import ops
+
+    _require_key(key, "surrogate_fused")
+
+    def one(xs, m):
+        mu, sg = moment_maps(m.vids, ctx.noise_scale)
+        mean, var = ops.am_surrogate_moments(
+            xs, w, jnp.asarray(mu), jnp.asarray(sg), block=ctx.block
+        )
+        if ctx.return_moments:
+            return mean, var
+        return _noise(key, mean, var)
+
+    return _map_pop(ctx, cmap, one, x)
+
+
+def _surrogate_conv2d_xla(ctx, x, w, cmap, key):
+    from repro.kernels import ref
+
+    _require_key(key, "surrogate_xla")
+
+    def one(xs, m):
+        mu, sg = moment_maps(m.vids, ctx.noise_scale)  # (F, kh, kw)
+        w_mu = w * (1.0 + jnp.asarray(mu)[..., None])
+        w_sg2 = (w * w) * (jnp.asarray(sg) ** 2)[..., None]
+        mean = ref.conv2d_exact_ref(xs, w_mu)
+        var = ref.conv2d_exact_ref(xs * xs, w_sg2)
+        if ctx.return_moments:
+            return mean, var
+        return _noise(key, mean, var)
+
+    return _map_pop(ctx, cmap, one, x)
+
+
+def _surrogate_conv2d_fused(ctx, x, w, cmap, key):
+    """Population-vectorized surrogate conv: im2col GEMMs with moments folded
+    into per-genome channel-major weights; one z per output position shared
+    across the population (common random numbers)."""
+    _require_key(key, "surrogate_fused")
+    f, kh, kw, cin = np.shape(w)
+    wm, wv = fold_conv_gemm_weights(w, cmap, noise_scale=ctx.noise_scale,
+                                    layout="tap_major")
+    wm_j, wv_j = jnp.asarray(wm), jnp.asarray(wv)  # (P?, F, K)
+
+    def patches(xs):  # (B, H, W, C) -> ((K, B*ho*wo), dims)
+        b, h, wd, c = xs.shape
+        ho, wo = h - kh + 1, wd - kw + 1
+        cols = [
+            xs[:, i : i + ho, j : j + wo, :] for i in range(kh) for j in range(kw)
+        ]
+        pat = jnp.transpose(jnp.stack(cols, 0), (0, 4, 1, 2, 3))
+        return pat.reshape(kh * kw * c, -1), (b, ho, wo)
+
+    if not cmap.pop:
+        pat, (b, ho, wo) = patches(x)
+        mean, var = wm_j @ pat, wv_j @ (pat * pat)
+    elif not ctx.pop_x:
+        pat, (b, ho, wo) = patches(x)
+        mean = jnp.einsum("pfk,km->pfm", wm_j, pat)
+        var = jnp.einsum("pfk,km->pfm", wv_j, pat * pat)
+    else:
+        pats = jax.vmap(lambda xs: patches(xs)[0])(x)
+        b, ho, wo = x.shape[1], x.shape[2] - kh + 1, x.shape[3] - kw + 1
+        mean = jnp.einsum("pfk,pkm->pfm", wm_j, pats)
+        var = jnp.einsum("pfk,pkm->pfm", wv_j, pats * pats)
+
+    def unflatten(t):  # (..., F, B*ho*wo) -> (..., B, ho, wo, F)
+        t = t.reshape(t.shape[:-1] + (b, ho, wo))
+        return jnp.moveaxis(t, -4, -1)
+
+    mean, var = unflatten(mean), unflatten(var)
+    if ctx.return_moments:
+        return mean, var
+    # CRN: z is drawn WITHOUT the population axis and broadcast over it.
+    z_shape = mean.shape[1:] if cmap.pop else mean.shape
+    z = jax.random.normal(key, z_shape, mean.dtype)
+    return mean + z * jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+register_backend("exact", "exact", matmul=_exact_matmul, conv2d=_exact_conv2d)
+register_backend("bitexact_ref", "bit", matmul=_bitexact_matmul_ref,
+                 conv2d=_bitexact_conv2d_ref)
+register_backend("bitexact_pallas", "bit", matmul=_bitexact_matmul_pallas,
+                 conv2d=_bitexact_conv2d_pallas)
+register_backend("surrogate_xla", "moments", matmul=_surrogate_matmul_xla,
+                 conv2d=_surrogate_conv2d_xla)
+register_backend("surrogate_fused", "moments", matmul=_surrogate_matmul_fused,
+                 conv2d=_surrogate_conv2d_fused)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AMEngine:
+    """Configured entry point to the backend registry.
+
+    The module-level am_matmul/am_conv2d use DEFAULT_ENGINE; consumers with
+    their own defaults (models, serving) hold an AMEngine instance.
+    """
+
+    backend: str | None = None  # None = auto-select per call
+    tile_k: int = 128
+    tile_n: int = 128
+    noise_scale: float = 1.0
+
+    def matmul(self, x, w, slot_map=None, *, backend=None, key=None,
+               block=None, return_moments=False, x_population=None):
+        """x (..., K) @ w (K, N) under AM numerics.
+
+        Leading non-contracting dims of x are flattened into M for the
+        backends and restored afterwards. With a population slot_map, a
+        3-D x whose leading dim equals P is treated as per-genome input
+        (override with x_population=True/False when ambiguous).
+        """
+        k, n = w.shape
+        cmap = canonical_matmul_map(
+            slot_map, k, n, tile_k=self.tile_k, tile_n=self.tile_n
+        )
+        pop_x = self._resolve_pop_x(x, cmap, 2, x_population)
+        lead = x.shape[(1 if pop_x else 0):-1]
+        x2 = x.reshape((cmap.population, -1, k) if pop_x else (-1, k))
+        m = int(np.prod(lead, dtype=np.int64)) if lead else 1
+        name = backend or self.backend or select_backend(
+            "matmul",
+            has_map=slot_map is not None and bool(np.any(cmap.vids)),
+            work=m * k * n * cmap.population,
+        )
+        ctx = _Ctx(self, block, return_moments, base_ndim=2, pop_x=pop_x)
+        out = get_backend(name).matmul(ctx, x2, w, cmap, key)
+
+        def fix(t):
+            if cmap.pop:
+                return t.reshape((t.shape[0],) + tuple(lead) + (n,))
+            return t.reshape(tuple(lead) + (n,))
+
+        if return_moments:
+            return fix(out[0]), fix(out[1])
+        return fix(out)
+
+    def conv2d(self, x, w, slot_map=None, *, backend=None, key=None,
+               return_moments=False, x_population=None):
+        """NHWC VALID stride-1 conv2d under AM numerics.
+
+        x: (B, H, W, Cin) — or (P, B, H, W, Cin) with a population slot_map;
+        w: (F, kh, kw, Cin); slot_map canonicalizes to (P?, F, kh, kw).
+        """
+        f, kh, kw, cin = w.shape
+        cmap = canonical_conv_map(slot_map, f, kh, kw)
+        pop_x = self._resolve_pop_x(x, cmap, 4, x_population)
+        ho = x.shape[-3] - kh + 1
+        wo = x.shape[-2] - kw + 1
+        name = backend or self.backend or select_backend(
+            "conv2d",
+            has_map=slot_map is not None and bool(np.any(cmap.vids)),
+            work=int(x.shape[-4]) * ho * wo * f * kh * kw * cin * cmap.population,
+        )
+        ctx = _Ctx(self, None, return_moments, base_ndim=4, pop_x=pop_x)
+        return get_backend(name).conv2d(ctx, x, w, cmap, key)
+
+    @staticmethod
+    def _resolve_pop_x(x, cmap: CanonicalMap, base_ndim: int, x_population):
+        if x_population is None:
+            pop_x = cmap.pop and np.ndim(x) == base_ndim + 1
+        else:
+            pop_x = bool(x_population)
+        if pop_x:
+            if not cmap.pop:
+                raise ValueError("x has a population axis but slot_map does not")
+            if x.shape[0] != cmap.population:
+                raise ValueError(
+                    f"x population axis {x.shape[0]} != slot-map population "
+                    f"{cmap.population}"
+                )
+        return pop_x
+
+
+DEFAULT_ENGINE = AMEngine()
+
+
+def am_matmul(x, w, slot_map=None, *, backend=None, key=None, engine=None,
+              block=None, return_moments=False, x_population=None,
+              tile_k=None, tile_n=None, noise_scale=None):
+    """Backend-dispatched AM matmul (module-level convenience)."""
+    eng = _configured(engine, tile_k=tile_k, tile_n=tile_n, noise_scale=noise_scale)
+    return eng.matmul(x, w, slot_map, backend=backend, key=key, block=block,
+                      return_moments=return_moments, x_population=x_population)
+
+
+def am_conv2d(x, w, slot_map=None, *, backend=None, key=None, engine=None,
+              return_moments=False, x_population=None, noise_scale=None):
+    """Backend-dispatched AM conv2d (module-level convenience)."""
+    eng = _configured(engine, noise_scale=noise_scale)
+    return eng.conv2d(x, w, slot_map, backend=backend, key=key,
+                      return_moments=return_moments, x_population=x_population)
+
+
+def _configured(engine, **overrides) -> AMEngine:
+    eng = engine or DEFAULT_ENGINE
+    kw = {k: v for k, v in overrides.items() if v is not None}
+    return dataclasses.replace(eng, **kw) if kw else eng

@@ -24,7 +24,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import hwmodel, interleave, nsga2, schemes
+from repro.core import engine, hwmodel, interleave, nsga2, schemes
 from repro.data import cifar_like
 from repro.models import cnn
 
@@ -64,19 +64,19 @@ def eval_accuracy(
     key=None,
     noise_scale: float = 1.0,
 ):
-    """CNN inference accuracy under a 198-slot sequence (None = exact)."""
+    """CNN inference accuracy under a 198-slot sequence (None = exact).
+
+    `numerics` is either a shorthand ("surrogate" -> surrogate_xla,
+    "bitexact" -> bitexact_ref) or any engine backend name.
+    """
     x, y = cifar_like.make_batch("test", 0, n_images)
     if seq is None:
         return cnn.accuracy(params, x, y, numerics="exact")
-    maps = _slot_maps(seq)
-    if numerics == "surrogate":
-        k = key if key is not None else jax.random.PRNGKey(0)
-        if noise_scale != 1.0:
-            num = ("surrogate_scaled", maps, k, noise_scale)
-        else:
-            num = ("surrogate", maps, k)
-        return cnn.accuracy(params, x, y, numerics=num, key=key)
-    return cnn.accuracy(params, x, y, numerics=("bitexact", maps))
+    backend = {"surrogate": "surrogate_xla", "bitexact": "bitexact_ref"}.get(
+        numerics, numerics
+    )
+    cfg = cnn.AMConfig.from_sequence(seq, backend=backend, noise_scale=noise_scale)
+    return cnn.accuracy(params, x, y, numerics=cfg, key=key)
 
 
 def make_fast_evaluator(params, n_images: int, noise_scale: float = 1.0):
@@ -128,14 +128,16 @@ def make_batched_evaluator(
     a single jitted device call, so a generation costs one host->device round
     trip instead of P.
 
-    The surrogate statistical model is identical to ``am_conv2d_surrogate_ref``
-    (per-slot (1+mu) mean scaling, (x^2 conv w^2 sigma^2) variance, Gaussian
-    noise), restructured for population throughput:
+    A thin client of the AM engine's fused-surrogate machinery: slot-map
+    canonicalization (engine.canonical_conv_map), host-side moment folding
+    into per-genome GEMM weights (engine.fold_conv_gemm_weights), the im2col
+    patch layout (engine.conv_patch_matrix) and the fixed-shape population
+    padding policy (engine.pad_population) are all the engine's; this module
+    only contributes the CNN-specific pipeline around them (pool, dense head,
+    argmax) fused into ONE jit so a generation stays a single device call:
 
-      * the per-slot moments are folded into per-genome *weight* matrices on
-        the host, so each conv becomes an im2col GEMM whose input patches are
-        shared by every genome; the layer-1 patch matrix is precomputed once
-        at evaluator build;
+      * each conv is an im2col GEMM whose input patches are shared by every
+        genome; the layer-1 patch matrix is precomputed once at build;
       * all GEMMs run channel-major ((F, K) @ (K, pixels)), the fast
         orientation for the CPU backend;
       * the population is processed in ``block``-genome slices inside one
@@ -154,8 +156,6 @@ def make_batched_evaluator(
     """
     import jax.numpy as jnp
 
-    from repro.core import surrogate
-
     x_np, y_np = cifar_like.make_batch("test", 0, n_images)
     bc = max(
         d for d in range(1, min(image_chunk, n_images) + 1) if n_images % d == 0
@@ -171,28 +171,16 @@ def make_batched_evaluator(
     # dropped by the VALID 2x2 pool, so it is never computed here)
     hf = 6  # final spatial
 
-    # Precompute transposed im2col patches of the (fixed) evaluation images:
-    # Px[(i,j,c), b*900] and its square, chunked. ~97 kB per image.
-    taps = [
-        x_np[:, i : i + h1, j : j + h1, :] for i in range(3) for j in range(3)
-    ]  # 9 x (n, 30, 30, 3)
-    px = np.stack(taps, 0).transpose(0, 4, 1, 2, 3)  # (9, 3, n, 30, 30)
+    # Precompute transposed im2col patches of the (fixed) evaluation images
+    # (engine tap-major layout: rows (i, j, c)), chunked. ~97 kB per image.
+    px = engine.conv_patch_matrix(x_np, 3, 3)  # (27, n, 900)
     px = px.reshape(27, nc, bc, h1 * h1).transpose(1, 0, 2, 3).reshape(nc, 27, -1)
     pxt = jnp.asarray(px, jnp.float32)
     pxxt = pxt * pxt
     yc = jnp.asarray(y_np.reshape(nc, bc))
 
-    # Per-variant moments (noise_scale folds in here, as in the ref path).
-    mu_t, sg_t = surrogate.moment_tables()
-    mu_t = (mu_t * noise_scale).astype(np.float32)
-    sg_t = (sg_t * noise_scale).astype(np.float32)
-
-    # Base weights in GEMM layout. L1 rows (f), cols (i, j, c) match pxt; L2
-    # rows (f), cols (c, t) match the layer-2 patch stacking below.
-    w1f = np.asarray(params["conv1_w"], np.float32).reshape(f1, 27)
-    w2f = np.asarray(params["conv2_w"], np.float32).transpose(0, 3, 1, 2)
-    w2f = w2f.reshape(f2, 9 * f1)
-    w1sq, w2sq = w1f * w1f, w2f * w2f
+    w1 = np.asarray(params["conv1_w"], np.float32)  # (f1, 3, 3, 3)
+    w2 = np.asarray(params["conv2_w"], np.float32)  # (f2, 3, 3, f1)
     b1 = jnp.asarray(params["conv1_b"]).reshape(1, f1, 1, 1, 1)
     b2 = jnp.asarray(params["conv2_b"]).reshape(1, f2, 1)
     wd, bd = jnp.asarray(params["dense_w"]), jnp.asarray(params["dense_b"])
@@ -246,18 +234,17 @@ def make_batched_evaluator(
         if g.shape[1] != N_SLOTS:
             raise ValueError(f"genome length {g.shape[1]} != {N_SLOTS} slots")
         p = g.shape[0]
-        n_blocks = 1 << (max(1, -(-p // g_blk)) - 1).bit_length()
-        p_pad = n_blocks * g_blk
-        if p_pad > p:  # pad with copies of row 0; padded scores are discarded
-            g = np.concatenate([g, np.repeat(g[:1], p_pad - p, axis=0)])
-        m1 = g[:, : f1 * 9].reshape(p_pad, f1, 9)
-        m2 = g[:, f1 * 9 :].reshape(p_pad, f2, 9)
-        # Fold per-slot moments into per-genome GEMM weights (c is the fastest
-        # axis of L1 columns; t is the fastest axis of L2 columns).
-        wm1 = w1f[None] * (1.0 + np.repeat(mu_t[m1], 3, axis=2))
-        wv1 = w1sq[None] * np.repeat(sg_t[m1] ** 2, 3, axis=2)
-        wm2 = w2f[None] * (1.0 + np.tile(mu_t[m2], (1, 1, f1)))
-        wv2 = w2sq[None] * np.tile(sg_t[m2] ** 2, (1, 1, f1))
+        n_blocks = engine.population_blocks(p, g_blk)
+        g = engine.pad_population(g, g_blk)
+        # Engine canonicalization + host-side moment folding into per-genome
+        # GEMM weights (L1 tap-major to match the precomputed image patches,
+        # L2 channel-major to match the pooled-activation stacking below).
+        m1 = engine.canonical_conv_map(g[:, : f1 * 9], f1, 3, 3)
+        m2 = engine.canonical_conv_map(g[:, f1 * 9 :], f2, 3, 3)
+        wm1, wv1 = engine.fold_conv_gemm_weights(
+            w1, m1, noise_scale=noise_scale, layout="tap_major")
+        wm2, wv2 = engine.fold_conv_gemm_weights(
+            w2, m2, noise_scale=noise_scale, layout="channel_major")
         counts = _compiled(n_blocks)(
             jnp.asarray(wm1.reshape(n_blocks, g_blk * f1, 27)),
             jnp.asarray(wv1.reshape(n_blocks, g_blk * f1, 27)),

@@ -25,7 +25,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-DEFAULT_BLOCK = (128, 128, 128)  # (bm, bk, bn)
+# (bm, bk, bn) fallback; callers should take blocks from the shared chooser
+# (kernels/ops.py choose_block, kind="surrogate_matmul").
+DEFAULT_BLOCK = (128, 128, 128)
 
 
 def _kernel(x_ref, w_ref, mu_ref, sg_ref, mean_ref, var_ref):

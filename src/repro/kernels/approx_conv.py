@@ -7,11 +7,16 @@ program the 3x3 taps are unrolled (static Python loop — 9 steps) and each tap
 does an emulated-AM multiply of the (bh, ho, wo, Cin) patch against the
 (F, Cin) tap weights, vectorized over filters.
 
-VMEM sizing (paper CNN, bh=1): patch bits tensor is
-(ho*wo, Cin, F, 10, 48) int32 <= (900, 3, 12, 480)*4 B = 58 MiB — too big in
-one shot, so the tap loop additionally chunks filters in groups of FG=4:
-(900, 3, 4, 480)*4 = 6.6 MiB per chunk, fitting VMEM. Grid iterates taps
-sequentially so only one chunk is live at a time.
+VMEM sizing (paper CNN, bh=1): the per-tap PPM bit tensor is
+(ho*wo, Cin, F, 10, 48) int32 = (900, 3, 12, 480)*4 B ~= 59 MiB — too big in
+one shot, so the tap loop additionally chunks filters in groups (FG=4 on the
+paper CNN): (900, 3, 4, 480)*4 B ~= 20 MiB per chunk. That is the FULL bit
+tensor for a chunk; the pipeline streams it through the emulation stages, so
+the live working set stays inside the ~16 MiB v5e VMEM envelope (the shared
+chooser budgets 20 MiB of nominal tensor per chunk for exactly this reason).
+Grid iterates taps sequentially so only one chunk is live at a time. The
+group size comes from kernels/ops.py choose_block(kind="bitexact_conv");
+FILTER_GROUP is the paper-CNN fallback.
 """
 from __future__ import annotations
 
@@ -26,7 +31,7 @@ from repro.core import fp32_mul, schemes
 FILTER_GROUP = 4
 
 
-def _make_kernel(kh: int, kw: int, f_total: int):
+def _make_kernel(kh: int, kw: int, f_total: int, filter_group: int):
     def _kernel(x_ref, w_ref, vid_ref, stack_ref, o_ref):
         x = x_ref[...]  # (bh, H, W, Cin)
         w = w_ref[...]  # (F, kh, kw, Cin)
@@ -38,8 +43,8 @@ def _make_kernel(kh: int, kw: int, f_total: int):
         # Filter-group outer loop + concatenate keeps the kernel scatter-free
         # (``.at[].add`` lowers to gather/scatter constants Pallas rejects).
         groups = []
-        for f0 in range(0, f_total, FILTER_GROUP):
-            f1 = min(f0 + FILTER_GROUP, f_total)
+        for f0 in range(0, f_total, filter_group):
+            f1 = min(f0 + filter_group, f_total)
             acc = jnp.zeros((bh, ho, wo, f1 - f0), jnp.float32)
             for ky in range(kh):
                 for kx in range(kw):
@@ -59,8 +64,11 @@ def _make_kernel(kh: int, kw: int, f_total: int):
     return _kernel
 
 
-@functools.partial(jax.jit, static_argnames=("batch_block", "interpret"))
-def am_conv2d_bitexact_kernel(x, w, slot_map, *, batch_block=1, interpret=True):
+@functools.partial(
+    jax.jit, static_argnames=("batch_block", "filter_group", "interpret")
+)
+def am_conv2d_bitexact_kernel(x, w, slot_map, *, batch_block=1,
+                              filter_group=FILTER_GROUP, interpret=True):
     """x (B,H,W,Cin) f32, w (F,kh,kw,Cin) f32, slot_map (F,kh,kw) int32."""
     b, h, wd, cin = x.shape
     f, kh, kw, _ = w.shape
@@ -69,7 +77,7 @@ def am_conv2d_bitexact_kernel(x, w, slot_map, *, batch_block=1, interpret=True):
 
     stack = jnp.asarray(schemes.scheme_stack(), jnp.int32)
     return pl.pallas_call(
-        _make_kernel(kh, kw, f),
+        _make_kernel(kh, kw, f, filter_group),
         grid=(b // batch_block,),
         in_specs=[
             pl.BlockSpec((batch_block, h, wd, cin), lambda i: (i, 0, 0, 0)),

@@ -27,7 +27,9 @@ from jax.experimental import pallas as pl
 
 from repro.core import fp32_mul, schemes
 
-DEFAULT_BLOCK = (8, 16, 16)  # (bm, bk, bn) — sized by the VMEM math above
+# (bm, bk, bn) fallback — sized by the VMEM math above; callers should take
+# blocks from the shared chooser (kernels/ops.py choose_block).
+DEFAULT_BLOCK = (8, 16, 16)
 
 
 def _kernel(x_ref, w_ref, vid_ref, stack_ref, o_ref):

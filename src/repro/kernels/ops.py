@@ -1,8 +1,14 @@
-"""Public jit'd wrappers over the Pallas kernels with padding + impl dispatch.
+"""Public jit'd wrappers over the Pallas kernels: padding, impl dispatch, and
+the VMEM-aware block-size chooser shared by every Pallas entry point.
 
-`impl="kernel"` runs the Pallas kernel (interpret=True on CPU, compiled on
-TPU); `impl="ref"` runs the pure-jnp oracle. Shapes are padded to block
-multiples and cropped back.
+These are the kernel-level primitives the AM engine (core/engine.py)
+dispatches to; call them directly only when you need explicit control over
+blocks or the interpret flag. `impl="kernel"` runs the Pallas kernel
+(interpret=True off TPU, compiled on TPU); `impl="ref"` runs the pure-jnp
+oracle; the surrogate path adds `impl="fused_xla"` — the same fused one-pass
+contraction expressed as a single XLA computation, the fast spelling on this
+CPU build box — and `impl="auto"` (kernel on TPU, fused_xla otherwise).
+Shapes are padded to block multiples and cropped back.
 """
 from __future__ import annotations
 
@@ -17,6 +23,70 @@ from repro.kernels import ref as _ref
 
 _ON_TPU = jax.default_backend() == "tpu"
 
+# Per-core VMEM envelopes the chooser sizes against (TPU v5e has ~16 MiB per
+# core; the bit-exact kernels leave headroom for the compiler's own buffers).
+VMEM_BYTES = 16 * 2**20
+BITEXACT_VMEM_BUDGET = 4 * 2**20
+
+# Bit-exact emulation's dominant temporary is the partial-product bit tensor:
+# (..., 10 rows, 48 cols) int32 per emulated multiply = 1920 B per element of
+# the block. The surrogate kernel's live set is x (bm,bk) + w/mu/sg (bk,bn)*3
+# + two (bm,bn) f32 accumulators.
+_PPM_BYTES_PER_MUL = 10 * 48 * 4
+
+
+def _pow2_at_most(cap: int, need: int) -> int:
+    """Largest power of two <= cap, clipped down to cover `need` if smaller."""
+    p = 1 << max(cap.bit_length() - 1, 0)
+    while p > 1 and p >= 2 * need:
+        p //= 2
+    return max(p, 1)
+
+
+def choose_block(kind: str, m: int, k: int, n: int, *, vmem_bytes: int | None = None):
+    """One block-size chooser for all Pallas entry points.
+
+    kind="bitexact_matmul": (bm, bk, bn) such that the PPM bit tensor
+      bm*bk*bn * 1920 B fits the bit-exact VMEM budget (default 4 MiB —
+      (8, 16, 16) -> 3.75 MiB, the hand-derived constant this replaces).
+    kind="surrogate_matmul": (bm, bk, bn) with (bm*bk + 3*bk*bn + 2*bm*bn)*4 B
+      under the v5e VMEM envelope and 128-aligned MXU dims when the problem
+      is large enough (defaults to (128, 128, 128) -> 384 KiB).
+    kind="bitexact_conv": the filter-group size FG limiting the per-tap bit
+      tensor ho*wo*cin*FG * 1920 B (m=ho*wo, k=cin, n=F here).
+    """
+    if kind == "bitexact_matmul":
+        budget = vmem_bytes or BITEXACT_VMEM_BUDGET
+        bm, bk, bn = 8, 16, 16
+        while bm * bk * bn * _PPM_BYTES_PER_MUL > budget and bm * bk * bn > 1:
+            # shrink the largest dim first
+            if bk >= bn and bk >= bm and bk > 1:
+                bk //= 2
+            elif bn >= bm and bn > 1:
+                bn //= 2
+            else:
+                bm //= 2
+        return (_pow2_at_most(bm, m), _pow2_at_most(bk, k), _pow2_at_most(bn, n))
+    if kind == "surrogate_matmul":
+        budget = vmem_bytes or VMEM_BYTES
+        bm = bk = bn = 128
+        while (bm * bk + 3 * bk * bn + 2 * bm * bn) * 4 > budget:
+            bm, bk, bn = bm // 2, bk // 2, bn // 2
+        return (
+            max(_pow2_at_most(bm, m), 8),
+            max(_pow2_at_most(bk, k), 8),
+            max(_pow2_at_most(bn, n), 8),
+        )
+    if kind == "bitexact_conv":
+        # The per-tap bit tensor streams through the pipeline in stages, so
+        # the live set is a fraction of the full (m*k*FG) PPM tensor; the
+        # default budget recovers the hand-derived FG=4 on the paper CNN
+        # (ho*wo=900, cin=3, F=12).
+        budget = vmem_bytes or (20 * 2**20)
+        per_filter = max(m * k, 1) * _PPM_BYTES_PER_MUL
+        return max(1, min(n, budget // per_filter))
+    raise ValueError(f"unknown block kind {kind!r}")
+
 
 def _pad_to(x, mults, axes):
     pads = [(0, 0)] * x.ndim
@@ -28,46 +98,72 @@ def _pad_to(x, mults, axes):
     return x
 
 
-def am_surrogate_matmul(x, w, mu, sg, key, *, block=_sgk.DEFAULT_BLOCK, impl="kernel"):
-    """Noise-complete statistical AM matmul: mean + z*sqrt(var)."""
+def am_surrogate_moments(x, w, mu, sg, *, block=None, impl="auto"):
+    """Fused statistical AM matmul moments: (mean, var), both (M, N) f32.
+
+    impl: "kernel" (Pallas, interpret off TPU) | "fused_xla" (one jitted XLA
+    computation, bit-identical to the oracle) | "ref" | "auto".
+    """
     m, k = x.shape
     n = w.shape[1]
+    if impl == "auto":
+        impl = "kernel" if _ON_TPU else "fused_xla"
+    if impl == "ref" or impl == "fused_xla":
+        return _fused_xla_moments(x, w, mu, sg)
+    block = block or choose_block("surrogate_matmul", m, k, n)
+    bm, bk, bn = block
+    xp = _pad_to(x, (bm, bk), (0, 1))
+    wp = _pad_to(w, (bk, bn), (0, 1))
+    mup = _pad_to(mu, (bk, bn), (0, 1))
+    sgp = _pad_to(sg, (bk, bn), (0, 1))
+    mean, var = _sgk.am_surrogate_matmul_kernel(
+        xp, wp, mup, sgp, block=(bm, bk, bn), interpret=not _ON_TPU
+    )
+    return mean[:m, :n], var[:m, :n]
+
+
+@jax.jit
+def _fused_xla_moments(x, w, mu, sg):
+    return _ref.am_surrogate_matmul_ref(x, w, mu, sg)
+
+
+def am_surrogate_matmul(x, w, mu, sg, key, *, block=None, impl="kernel"):
+    """Noise-complete statistical AM matmul: mean + z*sqrt(var)."""
     if impl == "ref":
         mean, var = _ref.am_surrogate_matmul_ref(x, w, mu, sg)
     else:
-        bm, bk, bn = block
-        xp = _pad_to(x, (bm, bk), (0, 1))
-        wp = _pad_to(w, (bk, bn), (0, 1))
-        mup = _pad_to(mu, (bk, bn), (0, 1))
-        sgp = _pad_to(sg, (bk, bn), (0, 1))
-        mean, var = _sgk.am_surrogate_matmul_kernel(
-            xp, wp, mup, sgp, block=block, interpret=not _ON_TPU
-        )
-        mean, var = mean[:m, :n], var[:m, :n]
+        mean, var = am_surrogate_moments(x, w, mu, sg, block=block, impl=impl)
     z = jax.random.normal(key, mean.shape, mean.dtype)
     return mean + z * jnp.sqrt(jnp.maximum(var, 0.0))
 
 
-def am_matmul_bitexact(x, w, variant_ids, *, block=_mmk.DEFAULT_BLOCK, impl="kernel"):
+def am_matmul_bitexact(x, w, variant_ids, *, block=None, impl="kernel"):
     """Bit-exact interleaved AM matmul."""
     if impl == "ref":
         return _ref.am_matmul_bitexact_ref(x, w, variant_ids)
     m, k = x.shape
     n = w.shape[1]
+    block = block or choose_block("bitexact_matmul", m, k, n)
     bm, bk, bn = block
     xp = _pad_to(x, (bm, bk), (0, 1))
     wp = _pad_to(w, (bk, bn), (0, 1))
     vp = _pad_to(jnp.asarray(variant_ids, jnp.int32), (bk, bn), (0, 1))
     out = _mmk.am_matmul_bitexact_kernel(
-        xp, wp, vp, block=block, interpret=not _ON_TPU
+        xp, wp, vp, block=(bm, bk, bn), interpret=not _ON_TPU
     )
     return out[:m, :n]
 
 
-def am_conv2d_bitexact(x, w, slot_map, *, impl="kernel", batch_block=1):
+def am_conv2d_bitexact(x, w, slot_map, *, impl="kernel", batch_block=1,
+                       filter_group=None):
     """Bit-exact interleaved conv2d (NHWC, VALID, stride 1)."""
     if impl == "ref":
         return _ref.am_conv2d_bitexact_ref(x, w, slot_map)
+    b, h, wd, cin = x.shape
+    f, kh, kw, _ = w.shape
+    ho, wo = h - kh + 1, wd - kw + 1
+    fg = filter_group or choose_block("bitexact_conv", ho * wo, cin, f)
     return _convk.am_conv2d_bitexact_kernel(
-        x, w, slot_map, batch_block=batch_block, interpret=not _ON_TPU
+        x, w, slot_map, batch_block=batch_block, filter_group=fg,
+        interpret=not _ON_TPU,
     )

@@ -6,7 +6,20 @@ one jitted token-step for the whole batch (the decode_32k / long_500k cell).
 Slot-level continuous batching: finished requests free their slot, queued
 requests prefill into it while other slots keep decoding.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --requests 4
+Slot isolation: stepping one slot updates ONLY that slot's cache slice (the
+decode step masks the cache merge per batch row), and an admitted request
+starts from a pristine cache slice — a request's output can never depend on
+which slot it lands in, what previously ran there, or what the neighboring
+slots are decoding. That isolation is what makes decode deterministic under
+continuous batching (test_serving_encdec asserts it) and is a precondition
+for serving approximate-multiplier numerics.
+
+AM serving: `--am-backend` routes every projection matmul through the AM
+engine (core/engine.py) via the model zoo's NumericsConfig, so the server
+can serve surrogate-AM (or bit-exact-AM) inference end to end:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m \
+      --requests 4 --am-backend surrogate_fused
 """
 from __future__ import annotations
 
@@ -17,8 +30,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import amlinear, engine
 from repro.launch import mesh as meshlib
 from repro.models import registry as R
+from repro.parallel import sharding as shd
 
 
 @dataclasses.dataclass
@@ -33,26 +48,62 @@ class Request:
 class Server:
     """Fixed-slot continuous batching server (greedy decode)."""
 
-    def __init__(self, cfg, mesh, slots: int = 4, ctx: int = 128, seed: int = 0):
+    def __init__(self, cfg, mesh, slots: int = 4, ctx: int = 128, seed: int = 0,
+                 am_backend: str | None = None,
+                 am_policy: str = "uniform:pm_csi"):
+        if am_backend and am_backend != "exact":
+            cfg = cfg.with_numerics(
+                amlinear.NumericsConfig.for_backend(am_backend, policy=am_policy))
         self.cfg = cfg
         self.mesh = mesh
         self.slots = slots
         self.ctx = ctx
         self.params = R.init_params(cfg, jax.random.PRNGKey(seed))
         self.cache = R.init_cache(cfg, slots, ctx)
+        # Pristine per-slot state for slot recycling (host copies: the live
+        # cache buffers are donated to the jitted step).
+        self._fresh = jax.tree.map(np.asarray, self.cache)
+        self._batch_axes = R.cache_batch_axes(cfg)
         self.active: list[Request | None] = [None] * slots
         self.pos = np.zeros(slots, np.int32)
         self.queue: list[Request] = []
+        # Surrogate AM numerics draw noise keyed on the request-local
+        # position, NOT a global step counter: a request's noise realization
+        # is then independent of the schedule and of neighboring slots, the
+        # same isolation contract the masked cache merge provides.
+        self._needs_key = cfg.numerics.mode == "surrogate"
+        self._noise_key = jax.random.PRNGKey(seed + 1)
         dec = R.decode_fn(cfg)
 
-        def step(params, cache, tokens, pos):
-            logits, new_cache = dec(params, cache, tokens, pos, cfg)
-            return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+        def step(params, cache, tokens, pos, mask, key):
+            logits, new_cache = dec(params, cache, tokens, pos, cfg,
+                                    key=(key if self._needs_key else None))
+
+            def merge(ax, new, old):
+                if ax < 0:
+                    return new
+                m = mask.reshape((1,) * ax + (-1,) + (1,) * (new.ndim - ax - 1))
+                return jnp.where(m, new, old)
+
+            merged = jax.tree.map(merge, self._batch_axes, new_cache, cache)
+            return jnp.argmax(logits, -1).astype(jnp.int32), merged
 
         self.jit_step = jax.jit(step, donate_argnums=(1,))
 
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def _reset_slot(self, i: int):
+        """Restore slot i's cache slice to its pristine init state."""
+
+        def leaf(ax, cur, fresh):
+            if ax < 0:
+                return cur
+            idx = [slice(None)] * cur.ndim
+            idx[ax] = i
+            return cur.at[tuple(idx)].set(jnp.asarray(fresh[tuple(idx)]))
+
+        self.cache = jax.tree.map(leaf, self._batch_axes, self.cache, self._fresh)
 
     def _admit(self):
         for i in range(self.slots):
@@ -60,6 +111,7 @@ class Server:
                 req = self.queue.pop(0)
                 self.active[i] = req
                 self.pos[i] = 0
+                self._reset_slot(i)
                 # Prefill by stepping the prompt through the decode path
                 # (slot-local; batched prefill is the prefill_32k cell).
                 for t in req.prompt:
@@ -67,15 +119,17 @@ class Server:
                 req.out = []
 
     def _step_slot(self, i: int, token: int):
-        # Single-slot step: decode whole batch, but only slot i's token is
-        # meaningful. pos is per-slot; the transformer decode takes a scalar
-        # pos, so slots advance in lockstep per call batch.
+        # Single-slot step: the decode runs the whole batch, but the cache
+        # merge is masked to slot i, so other slots' state is untouched.
         toks = np.zeros(self.slots, np.int32)
         toks[i] = token
-        with jax.set_mesh(self.mesh):
+        mask = np.zeros(self.slots, bool)
+        mask[i] = True
+        key = jax.random.fold_in(self._noise_key, int(self.pos[i]))
+        with shd.set_mesh(self.mesh):
             nxt, self.cache = self.jit_step(
                 self.params, self.cache, jnp.asarray(toks),
-                jnp.int32(self.pos[i]))
+                jnp.int32(self.pos[i]), jnp.asarray(mask), key)
         self.pos[i] += 1
         return int(np.asarray(nxt)[i])
 
@@ -102,11 +156,18 @@ def main() -> None:
     ap.add_argument("--arch", default="xlstm-125m")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--am-backend", default=None,
+                    choices=(None, *engine.BACKEND_NAMES),
+                    help="AM engine backend for every projection matmul "
+                         "(bitexact_* are validation-scale only)")
+    ap.add_argument("--am-policy", default="uniform:pm_csi",
+                    help="tile->variant policy (uniform:<v> | rr:<K> | seq:<name>)")
     args = ap.parse_args()
 
     spec = R.get(args.arch)
     cfg = spec.smoke
-    server = Server(cfg, meshlib.make_host_mesh(), slots=2, ctx=64)
+    server = Server(cfg, meshlib.make_host_mesh(), slots=2, ctx=64,
+                    am_backend=args.am_backend, am_policy=args.am_policy)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
                     max_new=args.max_new)
@@ -114,6 +175,8 @@ def main() -> None:
     for r in reqs:
         server.submit(r)
     server.run()
+    backend = args.am_backend or "exact"
+    print(f"[serve] arch={args.arch} am_backend={backend}")
     for r in reqs:
         print(f"req {r.rid}: prompt={r.prompt.tolist()} -> out={r.out}")
 

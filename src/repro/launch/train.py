@@ -99,7 +99,7 @@ class TrainRun:
 
     def _loop(self, params, opt_state, ebuf, start, steps, log_every,
               abort_at, history):
-        with jax.set_mesh(self.mesh):
+        with shd.set_mesh(self.mesh):
             for step in range(start, start + steps):
                 if abort_at is not None and step >= abort_at:
                     raise RuntimeError(f"simulated node failure at step {step}")

@@ -5,28 +5,68 @@ relu -> maxpool 2x2 -> dense(10). The paper applies approximate multipliers
 only inside the convolutions ("exact multipliers used elsewhere"), which this
 module honors: the dense head is always exact.
 
-Inference numerics:
-  "exact"                      — lax.conv f32 (the paper's exact multiplier)
-  ("bitexact", slot_maps)      — bit-level AM emulation per (filter, ky, kx)
-                                 slot (kernels/ref.py oracle, jit-chunked)
-  ("surrogate", slot_maps, key)— calibrated statistical AM (fast; NSGA-II
-                                 inner loop)
-
-slot_maps = [map1 (10,3,3), map2 (12,3,3)] int32 variant ids — 198 slots, the
-paper's interleaving granularity.
+Inference numerics are an `AMConfig`: an engine backend name plus the
+per-layer slot maps ([map1 (10,3,3), map2 (12,3,3)] int32 variant ids — 198
+slots, the paper's interleaving granularity). Both convs dispatch through
+core/engine.py, so every backend (exact / bitexact_ref / bitexact_pallas /
+surrogate_xla / surrogate_fused) is available to the CNN. The plain string
+"exact" is accepted wherever an AMConfig is.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref as kref
+from repro.core import engine
 
 LAYER_FILTERS = [10, 12]
 N_SLOTS = sum(f * 9 for f in LAYER_FILTERS)  # 198, paper Sec. III-A
+
+
+@dataclasses.dataclass(frozen=True)
+class AMConfig:
+    """CNN inference numerics: an engine backend + per-layer slot maps.
+
+    backend: core/engine.py backend name ("exact" ignores the maps).
+    slot_maps: per-layer (F, 3, 3) variant-id arrays, or None for exact.
+    noise_scale: moment amplification for the error-magnitude ablation
+      (1.0 = paper-faithful calibration; surrogate backends only).
+    """
+
+    backend: str = "exact"
+    slot_maps: tuple | None = None
+    noise_scale: float = 1.0
+
+    @classmethod
+    def from_sequence(cls, seq, backend: str = "surrogate_xla",
+                      noise_scale: float = 1.0) -> "AMConfig":
+        """Build from a flat 198-slot variant sequence."""
+        maps = slot_maps_from_sequence(np.asarray(seq, np.int32))
+        return cls(backend, tuple(np.asarray(m, np.int32) for m in maps),
+                   noise_scale)
+
+    @classmethod
+    def coerce(cls, numerics) -> "AMConfig":
+        if isinstance(numerics, AMConfig):
+            return numerics
+        if numerics is None or numerics == "exact":
+            return EXACT
+        raise ValueError(f"unknown numerics {numerics!r}; pass an AMConfig")
+
+    @property
+    def is_exact(self) -> bool:
+        return self.backend == "exact" or self.slot_maps is None
+
+    @property
+    def needs_key(self) -> bool:
+        return not self.is_exact and self.backend.startswith("surrogate")
+
+
+EXACT = AMConfig()
 
 
 def init_params(key):
@@ -53,32 +93,33 @@ def _head(params, h2):
     return flat @ params["dense_w"] + params["dense_b"]
 
 
-def _conv(params, x, layer: int, numerics, keys):
+def _conv(params, x, layer: int, cfg: AMConfig, keys):
     w = params[f"conv{layer}_w"]
     b = params[f"conv{layer}_b"]
-    if numerics == "exact" or numerics[0] == "exact":
-        y = kref.conv2d_exact_ref(x, w)
-    elif numerics[0] == "bitexact":
-        y = kref.am_conv2d_bitexact_ref(x, w, numerics[1][layer - 1])
-    elif numerics[0] == "surrogate":
-        y = kref.am_conv2d_surrogate_ref(x, w, numerics[1][layer - 1], keys[layer - 1])
-    elif numerics[0] == "surrogate_scaled":
-        y = kref.am_conv2d_surrogate_ref(
-            x, w, numerics[1][layer - 1], keys[layer - 1], noise_scale=numerics[3]
-        )
+    if cfg.is_exact:
+        y = engine.am_conv2d(x, w)
     else:
-        raise ValueError(f"unknown numerics {numerics!r}")
+        y = engine.am_conv2d(
+            x, w, cfg.slot_maps[layer - 1], backend=cfg.backend,
+            key=keys[layer - 1], noise_scale=cfg.noise_scale,
+        )
     return y + b
 
 
 def apply(params, x, numerics="exact", key=None):
-    """Forward pass. x: (B, 32, 32, 3) f32 in [0,1]. Returns (B, 10) logits."""
+    """Forward pass. x: (B, 32, 32, 3) f32 in [0,1]. Returns (B, 10) logits.
+
+    numerics: an AMConfig (or "exact"); key: PRNG key for surrogate noise.
+    """
+    cfg = AMConfig.coerce(numerics)
     keys = (None, None)
-    if isinstance(numerics, tuple) and numerics[0].startswith("surrogate"):
-        keys = jax.random.split(numerics[2] if len(numerics) > 2 else key, 2)
-    h = _conv(params, x, 1, numerics, keys)
+    if cfg.needs_key:
+        if key is None:
+            raise ValueError("surrogate numerics needs a PRNG key")
+        keys = jax.random.split(key, 2)
+    h = _conv(params, x, 1, cfg, keys)
     h = _maxpool2(jax.nn.relu(h))
-    h = _conv(params, h, 2, numerics, keys)
+    h = _conv(params, h, 2, cfg, keys)
     h = _maxpool2(jax.nn.relu(h))
     return _head(params, h)
 
@@ -124,19 +165,15 @@ def train(params, data_iter, steps: int, lr: float = 1e-3, log_every: int = 0):
 
 def accuracy(params, x, y, numerics="exact", key=None, chunk: int = 8):
     """Classification accuracy under the given numerics (chunked for memory)."""
+    cfg = AMConfig.coerce(numerics)
     n = x.shape[0]
     correct = 0
-    if numerics == "exact" or (isinstance(numerics, tuple) and numerics[0] != "bitexact"):
+    if not cfg.backend.startswith("bitexact"):
         chunk = max(chunk, 256)  # fast paths take large chunks
 
     @jax.jit
     def _pred(xb, k):
-        num = numerics
-        if isinstance(numerics, tuple) and numerics[0] == "surrogate":
-            num = (numerics[0], numerics[1], k)
-        elif isinstance(numerics, tuple) and numerics[0] == "surrogate_scaled":
-            num = (numerics[0], numerics[1], k, numerics[3])
-        return jnp.argmax(apply(params, xb, num), axis=-1)
+        return jnp.argmax(apply(params, xb, cfg, key=k), axis=-1)
 
     base_key = key if key is not None else jax.random.PRNGKey(0)
     for i in range(0, n, chunk):

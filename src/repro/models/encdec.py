@@ -229,5 +229,5 @@ def decode_step(params, cache, tokens, pos, cfg, key=None):
     )
     new_cache = dict(cache, self_k=nk, self_v=nv)
     h = L.rms_norm(x, params["norm_f"])
-    logits = T.lm_logits(params, h, cfg)[:, 0]
+    logits = T.lm_logits(params, h, cfg, key=T._k(key, 99))[:, 0]
     return logits, new_cache

@@ -142,6 +142,20 @@ def init_cache(cfg, batch: int, ctx: int):
     return transformer.init_cache(cfg, batch, ctx)
 
 
+def cache_batch_axes(cfg):
+    """Pytree matching the decode cache with each leaf's batch-axis index
+    (-1 for leaves without a batch axis). Derived from the same logical-axis
+    schemas the sharding rules use, so slot-level serving operations (masked
+    updates, slot resets) can never drift from the cache layout."""
+    axes = (encdec.cache_logical_axes() if is_encdec(cfg)
+            else transformer.cache_logical_axes(cfg))
+    is_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+    return jax.tree.map(
+        lambda ax: ax.index("batch") if "batch" in ax else -1, axes,
+        is_leaf=is_leaf)
+
+
 # ---------------------------------------------------------------------------
 # Input specs (ShapeDtypeStruct stand-ins, dry-run safe)
 # ---------------------------------------------------------------------------

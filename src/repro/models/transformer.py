@@ -430,5 +430,5 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, key=None,
             new_tail[f"t{j}"] = nc
         new_cache["tail"] = new_tail
     h = L.rms_norm(x, params["norm_f"])
-    logits = lm_logits(params, h, cfg)[:, 0]
+    logits = lm_logits(params, h, cfg, key=_k(key, 99))[:, 0]
     return logits, new_cache

@@ -42,8 +42,8 @@ def test_bitexact_cnn_close_to_exact(params):
     (errors are ~1e-7 relative)."""
     x, y = cifar_like.make_batch("test", 0, 16)
     seq = interleave.uniform_sequence("nm_csi", 198)
-    maps = cnn.slot_maps_from_sequence(seq)
-    acc_bit = cnn.accuracy(params, x, y, numerics=("bitexact", maps))
+    cfg = cnn.AMConfig.from_sequence(seq, backend="bitexact_ref")
+    acc_bit = cnn.accuracy(params, x, y, numerics=cfg)
     acc_ex = cnn.accuracy(params, x, y, numerics="exact")
     assert abs(acc_bit - acc_ex) <= 2 / 16  # at most 2 flips in 16
 

@@ -87,16 +87,19 @@ def test_collective_bytes_on_sharded_matmul():
     snippet = textwrap.dedent("""
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.parallel import sharding as shd
         from repro.roofline import hlo_costs
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = shd.make_mesh((2, 2), ("data", "model"))
+        ns = lambda spec: jax.sharding.NamedSharding(mesh, spec)
         def f(x, w):
             y = x @ w                       # w row-sharded -> partial sums
-            return jax.lax.with_sharding_constraint(
-                y, jax.sharding.NamedSharding(mesh, P("data", None)))
-        with jax.set_mesh(mesh):
-            co = jax.jit(f, in_shardings=(P("data", "model"), P("model", None)),
-                         out_shardings=P("data", None)).lower(
+            return jax.lax.with_sharding_constraint(y, ns(P("data", None)))
+        with shd.set_mesh(mesh):
+            # NamedSharding works on every jax version (bare PartitionSpecs
+            # in in_shardings require newer jax).
+            co = jax.jit(f, in_shardings=(ns(P("data", "model")),
+                                          ns(P("model", None))),
+                         out_shardings=ns(P("data", None))).lower(
                 jax.ShapeDtypeStruct((64, 64), jnp.float32),
                 jax.ShapeDtypeStruct((64, 32), jnp.float32)).compile()
         res = hlo_costs.analyze(co.as_text())
