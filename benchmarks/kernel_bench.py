@@ -198,6 +198,96 @@ def nsga2_bench(pop: int = 64, n_images: int = 64) -> dict:
     return m
 
 
+def nsga2_sharded_bench(
+    pop: int = 128,
+    n_images: int = 16,
+    device_counts: tuple = (1, 2, 4),
+    iters: int = 12,
+    warmup: int = 3,
+) -> dict:
+    """Population-sharded NSGA-II evaluation throughput per host-device count.
+
+    Each device count runs in its own subprocess (like tests/test_distribution
+    does) because ``--xla_force_host_platform_device_count`` must be set before
+    any jax import. The single-device baseline keeps XLA's normal intra-op
+    threading — an honest comparison — so the default shape is the search
+    sweet spot where sharding wins on this 2-core box: a small inner-loop
+    image subset (many generations over few images is the NSGA-II regime)
+    and a deep population, i.e. many genome blocks of mostly-serialized
+    small ops that one device scans sequentially but a mesh splits.
+    Genome scores are bitwise identical across device counts (the engine's
+    CRN invariant; asserted by tests/test_engine_sharded.py), so the sweep
+    is a pure throughput comparison. Returns per-device-count genomes/sec
+    columns plus the 2-device speedup (persisted to BENCH_nsga2.json).
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    snippet = textwrap.dedent(f"""
+        import json, time
+        import numpy as np, jax
+        from repro.experiments import paper_cnn
+        from repro.models import cnn
+        from repro.parallel import sharding as shd
+
+        nd = int(__import__("os").environ["BENCH_N_DEVICES"])
+        try:
+            params = paper_cnn.load_params()
+        except FileNotFoundError:
+            params = cnn.init_params(jax.random.PRNGKey(0))
+        mesh = shd.make_pop_mesh(nd) if nd > 1 else None
+        ev = paper_cnn.make_batched_evaluator(params, {n_images}, mesh=mesh)
+        rng = np.random.default_rng(0)
+        g = rng.integers(1, 9, ({pop}, cnn.N_SLOTS)).astype(np.int32)
+        key = jax.random.PRNGKey(42)
+        for _ in range({warmup}):
+            ev(g, key)
+        t0 = time.time()
+        for _ in range({iters}):
+            ev(g, key)
+        sec = (time.time() - t0) / {iters}
+        print(json.dumps({{"n_devices": nd, "sec_per_generation": sec,
+                           "genomes_per_sec": {pop} / sec}}))
+    """)
+
+    out: dict = {
+        "pop_size": pop,
+        "n_images": n_images,
+        "iters": iters,
+        "per_device_count": {},
+    }
+    src = str(__import__("pathlib").Path(__file__).resolve().parents[1] / "src")
+    for nd in device_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={nd}"
+        env["BENCH_N_DEVICES"] = str(nd)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        try:
+            proc = subprocess.run([sys.executable, "-c", snippet], env=env,
+                                  capture_output=True, text=True, timeout=600)
+        except subprocess.TimeoutExpired:
+            print(f"nsga2_sharded_bench nd={nd} TIMED OUT (600s); skipping")
+            continue
+        if proc.returncode != 0:
+            print(f"nsga2_sharded_bench nd={nd} FAILED:\n{proc.stdout}{proc.stderr}")
+            continue
+        row = json.loads(proc.stdout.strip().splitlines()[-1])
+        out["per_device_count"][str(nd)] = row
+        print(f"nsga2_sharded_pop{pop}_dev{nd},{row['sec_per_generation']*1e6:.1f},"
+              f"{row['genomes_per_sec']:.1f}_genomes_per_sec")
+    base = out["per_device_count"].get("1")
+    two = out["per_device_count"].get("2")
+    if base and two:
+        out["speedup_2dev_vs_1dev"] = (
+            two["genomes_per_sec"] / base["genomes_per_sec"])
+        print(f"nsga2_sharded_speedup_2dev,{out['speedup_2dev_vs_1dev']:.2f}x,"
+              f"pop{pop}")
+    return out
+
+
 def main() -> None:
     """Host micro-benchmarks, routed through the AM engine."""
     rng = np.random.default_rng(0)

@@ -1,0 +1,79 @@
+"""Generate artifacts/golden_bitexact.npz — the committed bit-exactness oracle.
+
+For every compressor-built AM variant (plus the exact multiplier) this stores
+fixed random inputs and the exact bit patterns bitexact_ref produces for
+  * elementwise FP32 multiplication (core/fp32_mul.fp32_multiply_variant),
+  * an interleaved AM matmul through the engine,
+  * an interleaved AM conv2d through the engine,
+so tests/test_golden_bitexact.py can assert, fast, that kernel/compressor
+refactors never silently drift the bit-level numerics. Regenerate ONLY when a
+numerics change is intended:
+
+  PYTHONPATH=src python -m benchmarks.make_golden_bitexact
+"""
+from __future__ import annotations
+
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, fp32_mul, schemes
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+GOLDEN = ARTIFACTS / "golden_bitexact.npz"
+
+# Shapes are deliberately tiny: the whole file re-verifies in well under a
+# second, so the test stays in the tier-1 (not slow) gate.
+MM_SHAPE = (4, 6, 5)  # (M, K, N)
+CV_SHAPE = (1, 5, 5, 2, 3)  # (B, H, W, Cin, F), 3x3 taps
+N_ELEMENTWISE = 64
+
+
+def build() -> dict:
+    rng = np.random.default_rng(2024)
+    m, k, n = MM_SHAPE
+    b, h, w_, cin, f = CV_SHAPE
+    x_mm = rng.standard_normal((m, k)).astype(np.float32)
+    w_mm = rng.standard_normal((k, n)).astype(np.float32)
+    x_cv = rng.standard_normal((b, h, w_, cin)).astype(np.float32)
+    w_cv = rng.standard_normal((f, 3, 3, cin)).astype(np.float32)
+    a_el = rng.standard_normal(N_ELEMENTWISE).astype(np.float32)
+    b_el = rng.standard_normal(N_ELEMENTWISE).astype(np.float32)
+    # Mixed per-slot maps exercise interleaving (not just uniform variants).
+    mixed_mm = rng.integers(0, len(schemes.VARIANTS), (k, n)).astype(np.int32)
+    mixed_cv = rng.integers(0, 9, (f, 3, 3)).astype(np.int32)
+
+    out = {
+        "x_mm": x_mm, "w_mm": w_mm, "x_cv": x_cv, "w_cv": w_cv,
+        "a_el": a_el, "b_el": b_el,
+        "mixed_mm_vids": mixed_mm, "mixed_cv_vids": mixed_cv,
+    }
+    for name, vid in schemes.VARIANT_IDS.items():
+        vids_mm = np.full((k, n), vid, np.int32)
+        vids_cv = np.full((f, 3, 3), vid, np.int32)
+        out[f"{name}__elementwise"] = np.asarray(
+            fp32_mul.fp32_multiply_interleaved(
+                jnp.asarray(a_el), jnp.asarray(b_el),
+                jnp.full(a_el.shape, vid, jnp.int32)))
+        out[f"{name}__matmul"] = np.asarray(engine.am_matmul(
+            jnp.asarray(x_mm), jnp.asarray(w_mm), vids_mm,
+            backend="bitexact_ref"))
+        out[f"{name}__conv2d"] = np.asarray(engine.am_conv2d(
+            jnp.asarray(x_cv), jnp.asarray(w_cv), vids_cv,
+            backend="bitexact_ref"))
+    out["mixed__matmul"] = np.asarray(engine.am_matmul(
+        jnp.asarray(x_mm), jnp.asarray(w_mm), mixed_mm, backend="bitexact_ref"))
+    out["mixed__conv2d"] = np.asarray(engine.am_conv2d(
+        jnp.asarray(x_cv), jnp.asarray(w_cv), mixed_cv, backend="bitexact_ref"))
+    return out
+
+
+def main() -> None:
+    ARTIFACTS.mkdir(exist_ok=True)
+    np.savez_compressed(GOLDEN, **build())
+    print(f"wrote {GOLDEN} ({GOLDEN.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,8 +5,9 @@
 Besides the printed sections, machine-readable metrics persist under
 artifacts/ so the perf trajectory is trackable across PRs (CI uploads them
 as workflow artifacts): BENCH_nsga2.json (search throughput: genomes/sec,
-wall-clock per generation, memo-cache hit rate) and BENCH_engine.json
-(per-backend AM engine matmul/conv timings).
+wall-clock per generation, memo-cache hit rate, plus the "sharded" section —
+genomes/sec per forced-host-device count and the 2-device speedup) and
+BENCH_engine.json (per-backend AM engine matmul/conv timings).
 """
 from __future__ import annotations
 
@@ -47,7 +48,13 @@ def main() -> None:
         "NSGA-II search throughput — batched vs per-individual evaluation",
         kernel_bench.nsga2_bench,
     )
+    sharded_metrics = _section(
+        "NSGA-II sharded search — genomes/sec per host-device count",
+        kernel_bench.nsga2_sharded_bench,
+    )
     if nsga2_metrics is not None:
+        if sharded_metrics is not None:
+            nsga2_metrics["sharded"] = sharded_metrics
         ARTIFACTS.mkdir(exist_ok=True)
         BENCH_NSGA2.write_text(json.dumps(nsga2_metrics, indent=1))
         print(f"wrote {BENCH_NSGA2}")

@@ -37,6 +37,20 @@ comparisons are made under the same noise realization and a population call
 matches the corresponding per-genome calls. `x` may also carry the
 population axis (layer 2 of a population-evaluated CNN).
 
+Population sharding: an AMEngine constructed with ``mesh=`` (a 1-D device
+mesh whose axis is named ``pop_axis_name``, see
+parallel/sharding.py::make_pop_mesh) splits the population axis of the
+surrogate_xla / surrogate_fused backends across devices under shard_map.
+The population is first padded to a multiple of the mesh axis
+(pad_population), each shard evaluates its contiguous slice with exactly
+the per-genome op sequence of the single-device path, and the CRN noise
+invariant makes results independent of the shard count AND the shard
+index: z is a function of the *global* call key and the single-genome
+output shape only — never of the population index or the shard-local
+index — so every shard reconstructs the identical noise realization from
+the replicated key. Sharded outputs are bitwise identical to the
+single-device population call (asserted in tests/test_engine_sharded.py).
+
 The canonicalization (sequence -> per-slot variant ids -> moment/scheme
 maps) is shared by all backends, lifted from core/interleave.py +
 core/schemes.py; the VMEM-aware block-size chooser shared by the Pallas
@@ -292,6 +306,16 @@ def pad_population(arr: np.ndarray, block: int) -> np.ndarray:
     return np.concatenate([arr, np.repeat(arr[:1], p_pad - p, axis=0)])
 
 
+def _pad_population_jax(x, p_pad: int):
+    """jnp analogue of pad_population for device arrays (population-x)."""
+    p = x.shape[0]
+    if p_pad == p:
+        return x
+    return jnp.concatenate(
+        [x, jnp.broadcast_to(x[:1], (p_pad - p,) + tuple(x.shape[1:]))]
+    )
+
+
 # ---------------------------------------------------------------------------
 # Backend registry
 # ---------------------------------------------------------------------------
@@ -529,6 +553,21 @@ def _surrogate_conv2d_xla(ctx, x, w, cmap, key):
     return _map_pop(ctx, cmap, one, x)
 
 
+def _fused_conv_patches(xs, kh: int, kw: int):
+    """Tap-major im2col on device: (B, H, W, C) -> ((K, B*ho*wo), dims).
+
+    jnp twin of conv_patch_matrix, shared by the fused conv backend and the
+    population-sharded conv path (identical op sequence keeps them bitwise
+    interchangeable)."""
+    b, h, wd, c = xs.shape
+    ho, wo = h - kh + 1, wd - kw + 1
+    cols = [
+        xs[:, i : i + ho, j : j + wo, :] for i in range(kh) for j in range(kw)
+    ]
+    pat = jnp.transpose(jnp.stack(cols, 0), (0, 4, 1, 2, 3))
+    return pat.reshape(kh * kw * c, -1), (b, ho, wo)
+
+
 def _surrogate_conv2d_fused(ctx, x, w, cmap, key):
     """Population-vectorized surrogate conv: im2col GEMMs with moments folded
     into per-genome channel-major weights; one z per output position shared
@@ -539,14 +578,8 @@ def _surrogate_conv2d_fused(ctx, x, w, cmap, key):
                                     layout="tap_major")
     wm_j, wv_j = jnp.asarray(wm), jnp.asarray(wv)  # (P?, F, K)
 
-    def patches(xs):  # (B, H, W, C) -> ((K, B*ho*wo), dims)
-        b, h, wd, c = xs.shape
-        ho, wo = h - kh + 1, wd - kw + 1
-        cols = [
-            xs[:, i : i + ho, j : j + wo, :] for i in range(kh) for j in range(kw)
-        ]
-        pat = jnp.transpose(jnp.stack(cols, 0), (0, 4, 1, 2, 3))
-        return pat.reshape(kh * kw * c, -1), (b, ho, wo)
+    def patches(xs):
+        return _fused_conv_patches(xs, kh, kw)
 
     if not cmap.pop:
         pat, (b, ho, wo) = patches(x)
@@ -596,12 +629,30 @@ class AMEngine:
 
     The module-level am_matmul/am_conv2d use DEFAULT_ENGINE; consumers with
     their own defaults (models, serving) hold an AMEngine instance.
+
+    ``mesh`` (with ``pop_axis_name`` naming its single axis) switches
+    population-axis surrogate calls onto the sharded path: genomes are
+    padded to a multiple of the mesh axis, each device scores a contiguous
+    population slice, and the CRN noise — keyed by the global call key and
+    the single-genome output shape, never by shard or population index —
+    makes the result bitwise identical to the single-device call.
+    Non-population calls and the exact/bit-exact backends ignore the mesh.
     """
 
     backend: str | None = None  # None = auto-select per call
     tile_k: int = 128
     tile_n: int = 128
     noise_scale: float = 1.0
+    mesh: Any = None  # 1-D device mesh for population sharding
+    pop_axis_name: str = "pop"
+
+    def _pop_shards(self, backend: str, cmap: CanonicalMap) -> int:
+        """Mesh axis size when this call takes the sharded path, else 0."""
+        if self.mesh is None or not cmap.pop:
+            return 0
+        if backend not in ("surrogate_xla", "surrogate_fused"):
+            return 0
+        return int(dict(self.mesh.shape)[self.pop_axis_name])
 
     def matmul(self, x, w, slot_map=None, *, backend=None, key=None,
                block=None, return_moments=False, x_population=None):
@@ -626,7 +677,10 @@ class AMEngine:
             work=m * k * n * cmap.population,
         )
         ctx = _Ctx(self, block, return_moments, base_ndim=2, pop_x=pop_x)
-        out = get_backend(name).matmul(ctx, x2, w, cmap, key)
+        if self._pop_shards(name, cmap):
+            out = self._sharded_matmul(name, ctx, x2, w, cmap, key)
+        else:
+            out = get_backend(name).matmul(ctx, x2, w, cmap, key)
 
         def fix(t):
             if cmap.pop:
@@ -655,7 +709,157 @@ class AMEngine:
             work=int(x.shape[-4]) * ho * wo * f * kh * kw * cin * cmap.population,
         )
         ctx = _Ctx(self, None, return_moments, base_ndim=4, pop_x=pop_x)
+        if self._pop_shards(name, cmap):
+            return self._sharded_conv2d(name, ctx, x, w, cmap, key)
         return get_backend(name).conv2d(ctx, x, w, cmap, key)
+
+    # --- population sharding (surrogate backends only) ---------------------
+    #
+    # Each shard receives a contiguous slice of the padded population and
+    # applies EXACTLY the per-genome op sequence of the single-device path
+    # (lax.map of the same dot/conv, or the same slice-invariant einsum), so
+    # the gathered result is bitwise identical to the unsharded call.
+    # CRN invariant: z = normal(global_key, single_genome_output_shape) —
+    # a function of the replicated key only, never of the shard-local or
+    # global population index — so every shard draws the same realization.
+
+    def _shard_pop_call(self, fn, pop_args, rep_args, *, n_outs: int):
+        """Run fn(*pop_args, *rep_args) under shard_map, population-sharded
+        leading axes for pop_args, replicated rep_args and outputs sharded."""
+        from jax.sharding import PartitionSpec as PS
+
+        from repro.parallel import sharding as shd
+
+        sp = PS(self.pop_axis_name)
+        in_specs = (sp,) * len(pop_args) + (PS(),) * len(rep_args)
+        out_specs = (sp,) * n_outs if n_outs > 1 else sp
+        f = shd.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+        return f(*pop_args, *rep_args)
+
+    def _sharded_matmul(self, name, ctx: _Ctx, x2, w, cmap: CanonicalMap, key):
+        _require_key(key, name)
+        from repro.kernels import ops
+
+        nshard = self._pop_shards(name, cmap)
+        p = cmap.population
+        vids = pad_population(cmap.vids, nshard)
+        mu, sg = moment_maps(vids, self.noise_scale)  # (Pp, K, N) np
+        fused, block = name == "surrogate_fused", ctx.block
+        pop_x, return_moments = ctx.pop_x, ctx.return_moments
+        if pop_x:
+            x2 = _pad_population_jax(jnp.asarray(x2), vids.shape[0])
+
+        def per_shard(*args):
+            if pop_x:
+                mu_s, sg_s, x_s, key_s = args
+                mapped = (mu_s, sg_s, x_s)
+            else:
+                mu_s, sg_s, key_s = args
+                mapped = (mu_s, sg_s)
+
+            def one(a):
+                xi = a[2] if pop_x else jnp.asarray(x2)
+                if fused:
+                    return ops.am_surrogate_moments(xi, w, a[0], a[1],
+                                                    block=block)
+                return _moment_matmul(xi, w, a[0], a[1])
+
+            mean, var = jax.lax.map(one, mapped)
+            if return_moments:
+                return mean, var
+            z = jax.random.normal(key_s, mean.shape[1:], mean.dtype)
+            return mean + z[None] * jnp.sqrt(jnp.maximum(var, 0.0))
+
+        pop_args = [jnp.asarray(mu), jnp.asarray(sg)]
+        if pop_x:
+            pop_args.append(x2)
+        out = self._shard_pop_call(
+            per_shard, tuple(pop_args), (key,),
+            n_outs=2 if return_moments else 1)
+        if return_moments:
+            return out[0][:p], out[1][:p]
+        return out[:p]
+
+    def _sharded_conv2d(self, name, ctx: _Ctx, x, w, cmap: CanonicalMap, key):
+        _require_key(key, name)
+        nshard = self._pop_shards(name, cmap)
+        p = cmap.population
+        vids = pad_population(cmap.vids, nshard)
+        f, kh, kw, cin = np.shape(w)
+        pop_x, return_moments = ctx.pop_x, ctx.return_moments
+        xj = jnp.asarray(x)
+        if pop_x:
+            xj = _pad_population_jax(xj, vids.shape[0])
+
+        if name == "surrogate_xla":
+            from repro.kernels import ref
+
+            mu, sg = moment_maps(vids, self.noise_scale)  # (Pp, F, kh, kw)
+            # Same folding arithmetic as the per-genome backend, batched.
+            w_mu = jnp.asarray(w) * (1.0 + jnp.asarray(mu)[..., None])
+            w_sg2 = (jnp.asarray(w) * jnp.asarray(w)) * (
+                jnp.asarray(sg) ** 2)[..., None]
+
+            def per_shard(*args):
+                if pop_x:
+                    wmu_s, wsg_s, x_s, key_s = args
+                    mapped = (wmu_s, wsg_s, x_s)
+                else:
+                    wmu_s, wsg_s, key_s = args
+                    mapped = (wmu_s, wsg_s)
+
+                def one(a):
+                    xi = a[2] if pop_x else xj
+                    mean = ref.conv2d_exact_ref(xi, a[0])
+                    var = ref.conv2d_exact_ref(xi * xi, a[1])
+                    return mean, var
+
+                mean, var = jax.lax.map(one, mapped)
+                if return_moments:
+                    return mean, var
+                z = jax.random.normal(key_s, mean.shape[1:], mean.dtype)
+                return mean + z[None] * jnp.sqrt(jnp.maximum(var, 0.0))
+
+            pop_args = [w_mu, w_sg2] + ([xj] if pop_x else [])
+        else:  # surrogate_fused: the slice-invariant einsum formulation
+            wm, wv = fold_conv_gemm_weights(
+                w, CanonicalMap(vids, True), noise_scale=self.noise_scale,
+                layout="tap_major")
+
+            def per_shard(*args):
+                if pop_x:
+                    wm_s, wv_s, x_s, key_s = args
+                    pats = jax.vmap(
+                        lambda xs: _fused_conv_patches(xs, kh, kw)[0])(x_s)
+                    b, ho, wo = (x_s.shape[1], x_s.shape[2] - kh + 1,
+                                 x_s.shape[3] - kw + 1)
+                    mean = jnp.einsum("pfk,pkm->pfm", wm_s, pats)
+                    var = jnp.einsum("pfk,pkm->pfm", wv_s, pats * pats)
+                else:
+                    wm_s, wv_s, key_s = args
+                    pat, (b, ho, wo) = _fused_conv_patches(xj, kh, kw)
+                    mean = jnp.einsum("pfk,km->pfm", wm_s, pat)
+                    var = jnp.einsum("pfk,km->pfm", wv_s, pat * pat)
+
+                def unflatten(t):
+                    t = t.reshape(t.shape[:-1] + (b, ho, wo))
+                    return jnp.moveaxis(t, -4, -1)
+
+                mean, var = unflatten(mean), unflatten(var)
+                if return_moments:
+                    return mean, var
+                z = jax.random.normal(key_s, mean.shape[1:], mean.dtype)
+                return mean + z[None] * jnp.sqrt(jnp.maximum(var, 0.0))
+
+            pop_args = [jnp.asarray(wm), jnp.asarray(wv)] + ([xj] if pop_x else [])
+
+        out = self._shard_pop_call(
+            per_shard, tuple(pop_args), (key,),
+            n_outs=2 if return_moments else 1)
+        if return_moments:
+            return out[0][:p], out[1][:p]
+        return out[:p]
 
     @staticmethod
     def _resolve_pop_x(x, cmap: CanonicalMap, base_ndim: int, x_population):
@@ -679,17 +883,22 @@ DEFAULT_ENGINE = AMEngine()
 
 def am_matmul(x, w, slot_map=None, *, backend=None, key=None, engine=None,
               block=None, return_moments=False, x_population=None,
-              tile_k=None, tile_n=None, noise_scale=None):
+              tile_k=None, tile_n=None, noise_scale=None, mesh=None,
+              pop_axis_name=None):
     """Backend-dispatched AM matmul (module-level convenience)."""
-    eng = _configured(engine, tile_k=tile_k, tile_n=tile_n, noise_scale=noise_scale)
+    eng = _configured(engine, tile_k=tile_k, tile_n=tile_n,
+                      noise_scale=noise_scale, mesh=mesh,
+                      pop_axis_name=pop_axis_name)
     return eng.matmul(x, w, slot_map, backend=backend, key=key, block=block,
                       return_moments=return_moments, x_population=x_population)
 
 
 def am_conv2d(x, w, slot_map=None, *, backend=None, key=None, engine=None,
-              return_moments=False, x_population=None, noise_scale=None):
+              return_moments=False, x_population=None, noise_scale=None,
+              mesh=None, pop_axis_name=None):
     """Backend-dispatched AM conv2d (module-level convenience)."""
-    eng = _configured(engine, noise_scale=noise_scale)
+    eng = _configured(engine, noise_scale=noise_scale, mesh=mesh,
+                      pop_axis_name=pop_axis_name)
     return eng.conv2d(x, w, slot_map, backend=backend, key=key,
                       return_moments=return_moments, x_population=x_population)
 

@@ -70,6 +70,15 @@ class BatchEvaluator:
     ``memoize=False`` disables caching entirely: every genome is scored on
     every call (e.g. for objectives meant to get independent stochastic
     draws) and nothing is retained.
+
+    ``mesh`` (a device mesh with a ``pop_axis_name`` axis) pads every batch
+    sent to the evaluator to a multiple of the mesh axis size (copies of
+    row 0, reusing the engine's ``pad_population`` policy) and strips the
+    padded rows from the result, so any population objective — including
+    the engine's sharded evaluators, which then see shard-divisible
+    populations — composes with sharded evaluation. The memo cache and its
+    keys are untouched: padding never enters the cache, and telemetry
+    counts only real genomes.
     """
 
     def __init__(
@@ -78,10 +87,15 @@ class BatchEvaluator:
         *,
         memoize: bool = True,
         position_agnostic: bool = False,
+        mesh=None,
+        pop_axis_name: str = "pop",
     ):
         self._fn = objectives_batch
         self._memoize = memoize
         self._position_agnostic = position_agnostic
+        self._pad_multiple = (
+            1 if mesh is None else int(dict(mesh.shape)[pop_axis_name])
+        )
         self._cache: dict[bytes, np.ndarray] = {}
         self.stats = EvalStats()
 
@@ -90,6 +104,12 @@ class BatchEvaluator:
         return np.sort(g).tobytes() if self._position_agnostic else g.tobytes()
 
     def _score(self, batch: np.ndarray) -> np.ndarray:
+        p = batch.shape[0]
+        if self._pad_multiple > 1:
+            from repro.core.engine import pad_population  # lazy: keeps the
+            # module numpy-only for consumers that never shard
+
+            batch = pad_population(batch, self._pad_multiple)
         objs = np.asarray(self._fn(batch), float)
         if objs.shape[0] != batch.shape[0]:
             raise ValueError(
@@ -97,8 +117,8 @@ class BatchEvaluator:
                 f"{batch.shape[0]} genomes"
             )
         self.stats.batch_calls += 1
-        self.stats.genomes_scored += batch.shape[0]
-        return objs
+        self.stats.genomes_scored += p
+        return objs[:p]
 
     def __call__(self, genomes: Sequence[np.ndarray]) -> list[np.ndarray]:
         """Score a list of genomes; returns per-genome objective vectors."""
@@ -216,6 +236,8 @@ def optimize(
     seed: int = 0,
     memoize: bool = True,
     position_agnostic: bool = False,
+    mesh=None,
+    pop_axis_name: str = "pop",
     stats: EvalStats | None = None,
     log: Callable[[str], None] | None = None,
 ) -> list[Individual]:
@@ -238,6 +260,11 @@ def optimize(
         paper's position-agnostic fitness — `experiments/paper_cnn.py` opts
         in at calibrated noise). Default False: only exact duplicate
         sequences are aliased, which is always safe.
+      mesh: optional device mesh (axis named ``pop_axis_name``): every
+        evaluator batch is padded to a multiple of the mesh axis before the
+        call and stripped after (see BatchEvaluator), so sharded population
+        objectives always receive shard-divisible batches. The search
+        trajectory is unchanged for any shard-invariant objective.
       stats: optional ``EvalStats`` instance populated with batch-call /
         cache-hit telemetry.
     """
@@ -251,7 +278,8 @@ def optimize(
         objectives_batch = per_individual_batch(objective_fn)
 
     evaluator = BatchEvaluator(
-        objectives_batch, memoize=memoize, position_agnostic=position_agnostic
+        objectives_batch, memoize=memoize, position_agnostic=position_agnostic,
+        mesh=mesh, pop_axis_name=pop_axis_name,
     )
     if stats is not None:
         evaluator.stats = stats

@@ -120,6 +120,8 @@ def make_batched_evaluator(
     noise_scale: float = 1.0,
     block: int = 2,
     image_chunk: int = 64,
+    mesh=None,
+    pop_axis_name: str = "pop",
 ):
     """Population-batched surrogate CNN accuracy: one device call per batch.
 
@@ -153,9 +155,19 @@ def make_batched_evaluator(
     shapes are fixed: a genome's score is bitwise identical whether it is
     evaluated alone or inside any batch (the batched-vs-per-individual parity
     the tests assert), and compilation cost is O(log P) distinct shapes.
+
+    ``mesh`` (a 1-D device mesh whose axis is named ``pop_axis_name``, see
+    parallel/sharding.py::make_pop_mesh) shards the genome-block axis over
+    devices under shard_map: the population pads up to a block multiple of
+    the mesh axis, each device scans its contiguous slice of blocks with the
+    identical per-block math, and the CRN noise (keyed only by the global
+    ``key`` and the chunk index, replicated across shards) makes accuracies
+    bitwise identical to the single-device call at any shard count
+    (tests/test_engine_sharded.py asserts this differentially).
     """
     import jax.numpy as jnp
 
+    n_shards = 1 if mesh is None else int(dict(mesh.shape)[pop_axis_name])
     x_np, y_np = cifar_like.make_batch("test", 0, n_images)
     bc = max(
         d for d in range(1, min(image_chunk, n_images) + 1) if n_images % d == 0
@@ -187,8 +199,10 @@ def make_batched_evaluator(
 
     @functools.lru_cache(maxsize=None)
     def _compiled(n_blocks: int):
-        @jax.jit
         def n_correct(wm1, wv1, wm2, wv2, key):
+            # Block count from the (possibly shard-local) operand, so the
+            # same body serves the single-device and sharded paths.
+            nb = wm1.shape[0]
             def chunk_step(total, inp):
                 ci, pxc, pxxc, yb = inp
                 k1, k2 = jax.random.split(jax.random.fold_in(key, ci))
@@ -222,20 +236,36 @@ def make_batched_evaluator(
 
             total, _ = jax.lax.scan(
                 chunk_step,
-                jnp.zeros((n_blocks * g_blk,), jnp.int32),
+                jnp.zeros((nb * g_blk,), jnp.int32),
                 (jnp.arange(nc), pxt, pxxt, yc),
             )
             return total
 
-        return n_correct
+        if mesh is None:
+            return jax.jit(n_correct)
+        from jax.sharding import PartitionSpec as P
+
+        from repro.parallel import sharding as shd
+
+        sp = P(pop_axis_name)
+        return jax.jit(shd.shard_map(
+            n_correct, mesh=mesh, in_specs=(sp, sp, sp, sp, P()),
+            out_specs=sp, check_vma=False))
 
     def evaluate(genomes: np.ndarray, key) -> np.ndarray:
         g = np.atleast_2d(np.asarray(genomes, np.int32))
         if g.shape[1] != N_SLOTS:
             raise ValueError(f"genome length {g.shape[1]} != {N_SLOTS} slots")
         p = g.shape[0]
-        n_blocks = engine.population_blocks(p, g_blk)
+        # Shard divisibility: round the power-of-two block count up to a
+        # multiple of the mesh axis so every shard gets an equal slice of
+        # blocks (a no-op for power-of-two meshes at or below the count).
+        pb = engine.population_blocks(p, g_blk)
+        n_blocks = -(-pb // n_shards) * n_shards
         g = engine.pad_population(g, g_blk)
+        if g.shape[0] < n_blocks * g_blk:  # mesh wider than the padded pop
+            g = np.concatenate(
+                [g, np.repeat(g[:1], n_blocks * g_blk - g.shape[0], axis=0)])
         # Engine canonicalization + host-side moment folding into per-genome
         # GEMM weights (L1 tap-major to match the precomputed image patches,
         # L2 channel-major to match the pooled-activation stacking below).
@@ -293,6 +323,7 @@ def nsga_study(
     noise_scale: float = 1.0,
     batched: bool = True,
     position_agnostic: bool | None = None,
+    mesh=None,
     log=print,
 ):
     """NSGA-II over 198-slot sequences with a K-variant alphabet.
@@ -314,6 +345,12 @@ def nsga_study(
     accuracy is measurably positional, so the default (None) keys the cache
     on the multiset when ``noise_scale <= 1`` and on the exact sequence
     otherwise.
+
+    ``mesh`` shards each generation's offspring evaluation over the mesh's
+    population axis (see make_batched_evaluator); the memoizing front-end
+    and the Pareto machinery are untouched, and the evaluator's bitwise
+    shard invariance means the search trajectory — every front, every knee
+    — is identical at any device count.
     """
     if ranking is None:
         alphabet = interleave.alphabet_for_k(k)
@@ -324,7 +361,7 @@ def nsga_study(
         position_agnostic = noise_scale <= 1.0
     eval_key = jax.random.PRNGKey(seed + 1000)
     stats = nsga2.EvalStats()
-    evaluate = make_batched_evaluator(params, n_images, noise_scale)
+    evaluate = make_batched_evaluator(params, n_images, noise_scale, mesh=mesh)
 
     if batched:
 
@@ -350,6 +387,7 @@ def nsga_study(
         generations=generations,
         seed=seed,
         position_agnostic=position_agnostic,
+        mesh=mesh,
         stats=stats,
         log=(lambda s: log(f"  [K={k}] {s}")) if log else None,
         **objective_kwargs,

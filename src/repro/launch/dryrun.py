@@ -1,17 +1,27 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh, record memory/cost/roofline terms.
 
-# Multi-pod dry-run: lower + compile every (arch x shape) cell on the
-# production mesh, record memory/cost/roofline terms.
-#
-# MUST be run as its own process (the XLA_FLAGS line above executes before
-# any jax import, giving 512 placeholder host devices).
-#
-#   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
-#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
-#   PYTHONPATH=src python -m repro.launch.dryrun --all --jobs 6   # parallel procs
-#
-# Results: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+MUST be run as its own process: the ``XLA_FLAGS`` mutation below executes at
+import time, before any jax import, to provide 512 placeholder host devices —
+importing this module into a process that already initialized jax (e.g. the
+pytest runner) will NOT change the device count. A pre-set ``XLA_FLAGS`` env
+var is respected: the forced-device-count flag is appended only when the
+caller has not already set one, so wrappers (CI, benchmarks, tests) can pin
+their own device count or extra XLA options without being clobbered.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --all --jobs 6   # parallel procs
+
+Results: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512"
+    ).strip()
 
 import argparse
 import json

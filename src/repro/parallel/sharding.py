@@ -84,6 +84,24 @@ def axis_size(axis: str) -> int:
         return jax.lax.axis_size(axis)
     return jax.lax.psum(1, axis)
 
+
+def make_pop_mesh(n_devices: int | None = None, axis_name: str = "pop") -> Mesh:
+    """1-D mesh over the first ``n_devices`` devices for NSGA-II population
+    sharding (core/engine.py ``AMEngine(mesh=...)``,
+    experiments/paper_cnn.py::make_batched_evaluator ``mesh=``).
+
+    Built with the raw Mesh constructor (not make_mesh) so a mesh over a
+    device subset works — e.g. a 2-way population mesh on a 4-device host.
+    On CPU hosts, force placeholder devices per process with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* any jax
+    import (the repo's tests/benchmarks do this via subprocesses).
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if n > len(devs):
+        raise ValueError(f"asked for {n} devices, host has {len(devs)}")
+    return Mesh(np.asarray(devs[:n]), (axis_name,))
+
 # logical axis -> mesh axis (or tuple of mesh axes, tried jointly)
 DEFAULT_RULES: dict[str, Any] = {
     "batch": ("pod", "data"),

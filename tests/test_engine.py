@@ -334,3 +334,104 @@ def test_engine_matmul_batched_x(mm):
                           key=KEY)
     np.testing.assert_allclose(np.asarray(y.reshape(6, 7)), np.asarray(y2),
                                rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Canonicalization properties — shared property bodies
+#
+# The checks live here as plain helpers so they run everywhere on fixed cases;
+# tests/test_engine_property.py sweeps the same bodies under hypothesis
+# (skipped where hypothesis is not installed, like test_compressors_property).
+# ---------------------------------------------------------------------------
+
+
+def check_matmul_map_property(gk, gn, tk, tn, seed):
+    """Flat sequence, tile grid, and expanded full map are one canonical map
+    sharing the byte-level memo key, and canonicalization is idempotent."""
+    k, n = gk * tk, gn * tn
+    grid = np.random.default_rng(seed).integers(0, 9, (gk, gn)).astype(np.int32)
+    full = np.repeat(np.repeat(grid, tk, 0), tn, 1)
+    maps = [
+        engine.canonical_matmul_map(m, k, n, tile_k=tk, tile_n=tn)
+        for m in (grid, grid.ravel(), full)
+    ]
+    for m in maps[1:]:
+        np.testing.assert_array_equal(maps[0].vids, m.vids)
+        assert maps[0].vids.tobytes() == m.vids.tobytes()  # same memo key
+    assert not any(m.pop for m in maps)
+    twice = engine.canonical_matmul_map(maps[0].vids, k, n, tile_k=tk, tile_n=tn)
+    np.testing.assert_array_equal(maps[0].vids, twice.vids)
+    assert not twice.pop
+
+
+def check_policy_map_property(policy, gk, gn):
+    """A policy string canonicalizes identically on every call (the cached
+    sequence), and re-canonicalizing its vids is the identity."""
+    k, n = gk * 2, gn * 2
+    a = engine.canonical_matmul_map(policy, k, n, tile_k=2, tile_n=2)
+    b = engine.canonical_matmul_map(policy, k, n, tile_k=2, tile_n=2)
+    np.testing.assert_array_equal(a.vids, b.vids)
+    c = engine.canonical_matmul_map(a.vids, k, n, tile_k=2, tile_n=2)
+    np.testing.assert_array_equal(a.vids, c.vids)
+
+
+def check_conv_map_property(f, kh, kw, pop, seed):
+    """Flat and full conv spellings agree (with and without a population
+    axis), share the memo key, and canonicalize idempotently."""
+    rng = np.random.default_rng(seed)
+    if pop == 0:
+        vids = rng.integers(0, 9, (f, kh, kw)).astype(np.int32)
+        flat = vids.ravel()
+    else:
+        vids = rng.integers(0, 9, (pop, f, kh, kw)).astype(np.int32)
+        flat = vids.reshape(pop, -1)
+    a = engine.canonical_conv_map(vids, f, kh, kw)
+    b = engine.canonical_conv_map(flat, f, kh, kw)
+    np.testing.assert_array_equal(a.vids, b.vids)
+    assert a.pop == b.pop == (pop > 0)
+    assert a.vids.tobytes() == b.vids.tobytes()  # same memo key
+    c = engine.canonical_conv_map(a.vids, f, kh, kw)
+    np.testing.assert_array_equal(a.vids, c.vids)
+
+
+def check_multiset_memo_property(length, seed):
+    """Position-agnostic memo keys alias all permutations of one multiset —
+    the paper's multiset fitness: one evaluation, identical objectives."""
+    from repro.core import nsga2
+
+    rng = np.random.default_rng(seed)
+    g = rng.integers(0, 9, length).astype(np.int32)
+    perm = rng.permutation(g).astype(np.int32)
+    calls = []
+
+    def fn(batch):
+        calls.append(batch.shape[0])
+        return batch.sum(1, keepdims=True).astype(float)
+
+    ev = nsga2.BatchEvaluator(fn, position_agnostic=True)
+    o1, o2 = ev([g, perm])
+    assert sum(calls) == 1  # one multiset -> one evaluation
+    np.testing.assert_array_equal(o1, o2)
+
+
+@pytest.mark.parametrize("gk,gn,tk,tn,seed",
+                         [(2, 2, 1, 1, 0), (3, 5, 2, 3, 1), (5, 2, 3, 1, 2)])
+def test_matmul_map_property_fixed(gk, gn, tk, tn, seed):
+    check_matmul_map_property(gk, gn, tk, tn, seed)
+
+
+@pytest.mark.parametrize("policy", ["uniform:pm_csi", "uniform:exact", "rr:4"])
+def test_policy_map_property_fixed(policy):
+    check_policy_map_property(policy, 3, 2)
+
+
+@pytest.mark.parametrize("f,kh,kw,pop,seed",
+                         [(4, 3, 3, 0, 0), (1, 1, 2, 0, 1), (6, 2, 3, 3, 2),
+                          (2, 3, 3, 1, 3)])
+def test_conv_map_property_fixed(f, kh, kw, pop, seed):
+    check_conv_map_property(f, kh, kw, pop, seed)
+
+
+@pytest.mark.parametrize("length,seed", [(1, 0), (8, 1), (198, 2)])
+def test_multiset_memo_property_fixed(length, seed):
+    check_multiset_memo_property(length, seed)

@@ -1,0 +1,49 @@
+"""Hypothesis sweeps of the engine canonicalization properties.
+
+The property bodies live in tests/test_engine.py (check_*_property helpers)
+so fixed-case versions run even without hypothesis; this module widens them
+to random policies, flat sequences, tile grids, full maps, and population
+axes: equivalent spellings canonicalize to one map with one byte-level memo
+key, and canonicalization is idempotent.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (CI installs it)")
+from hypothesis import given, settings, strategies as st
+
+from tests.test_engine import (
+    check_conv_map_property,
+    check_matmul_map_property,
+    check_multiset_memo_property,
+    check_policy_map_property,
+)
+
+_SEEDS = st.integers(0, 2**31 - 1)
+
+
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(1, 3),
+       st.integers(1, 3), _SEEDS)
+@settings(max_examples=25, deadline=None)
+def test_matmul_map_spellings_and_idempotence(gk, gn, tk, tn, seed):
+    check_matmul_map_property(gk, gn, tk, tn, seed)
+
+
+@given(st.sampled_from(["uniform:pm_csi", "uniform:nm_ni", "uniform:exact",
+                        "rr:2", "rr:4", "rr:8"]),
+       st.integers(1, 4), st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_policy_maps_deterministic_and_idempotent(policy, gk, gn):
+    check_policy_map_property(policy, gk, gn)
+
+
+@given(st.integers(1, 6), st.integers(1, 3), st.integers(1, 3),
+       st.integers(0, 4), _SEEDS)
+@settings(max_examples=25, deadline=None)
+def test_conv_map_spellings_and_idempotence(f, kh, kw, pop, seed):
+    check_conv_map_property(f, kh, kw, pop, seed)
+
+
+@given(st.integers(1, 64), _SEEDS)
+@settings(max_examples=25, deadline=None)
+def test_multiset_permutations_share_memo_key(length, seed):
+    check_multiset_memo_property(length, seed)

@@ -1,0 +1,222 @@
+"""Differential parity suite: population-sharded evaluation vs single-device.
+
+The engine's sharded path (core/engine.py ``AMEngine(mesh=...)``) and the
+sharded NSGA-II evaluator (experiments/paper_cnn.py ``mesh=``) promise
+bitwise-identical results at any shard count — the CRN noise is a function
+of the global call key only, never of the shard or population index, and
+each shard applies the single-device per-genome op sequence to its slice.
+These tests assert that promise differentially in subprocesses with forced
+host device counts (2 and 4), including non-divisible population sizes that
+exercise the padding path, plus the nsga2-level padding front-end and the
+launch/dryrun XLA_FLAGS guard.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def _run_multidevice(snippet: str, n_devices: int) -> None:
+    """Run a test body in a subprocess with forced host devices (the main
+    pytest process keeps the single real CPU device per the assignment)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(snippet)],
+                          env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+ENGINE_PARITY = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import engine
+    from repro.parallel import sharding as shd
+
+    shard_counts = {shard_counts}
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((5, 12)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((12, 7)).astype(np.float32))
+    xc = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
+    wc = jnp.asarray(rng.standard_normal((4, 3, 3, 3)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+
+    # Divisible and non-divisible population sizes (padding path).
+    for pop in (3, 4, 8):
+        mv = rng.integers(0, 9, (pop, 12, 7)).astype(np.int32)
+        cvv = rng.integers(0, 9, (pop, 4, 3, 3)).astype(np.int32)
+        for backend in ("surrogate_xla", "surrogate_fused"):
+            mm0 = np.asarray(engine.am_matmul(x, w, mv, backend=backend, key=key))
+            cv0 = np.asarray(engine.am_conv2d(xc, wc, cvv, backend=backend, key=key))
+            for nd in shard_counts:
+                mesh = shd.make_pop_mesh(nd)
+                mm = np.asarray(engine.am_matmul(
+                    x, w, mv, backend=backend, key=key, mesh=mesh))
+                cv = np.asarray(engine.am_conv2d(
+                    xc, wc, cvv, backend=backend, key=key, mesh=mesh))
+                assert np.array_equal(mm0, mm), (pop, backend, nd, "matmul")
+                assert np.array_equal(cv0, cv), (pop, backend, nd, "conv2d")
+
+    # Population-x (layer-2 shape) and return_moments variants.
+    pv = rng.integers(0, 9, (4, 4, 3, 3)).astype(np.int32)
+    xp = jnp.asarray(rng.standard_normal((4, 2, 8, 8, 3)).astype(np.float32))
+    for nd in shard_counts:
+        mesh = shd.make_pop_mesh(nd)
+        for backend in ("surrogate_xla", "surrogate_fused"):
+            a = np.asarray(engine.am_conv2d(xp, wc, pv, backend=backend, key=key))
+            b = np.asarray(engine.am_conv2d(
+                xp, wc, pv, backend=backend, key=key, mesh=mesh))
+            assert np.array_equal(a, b), (backend, nd, "pop-x conv")
+        m0, v0 = engine.am_conv2d(xc, wc, pv, backend="surrogate_fused",
+                                  key=key, return_moments=True)
+        m1, v1 = engine.am_conv2d(xc, wc, pv, backend="surrogate_fused",
+                                  key=key, return_moments=True, mesh=mesh)
+        assert np.array_equal(np.asarray(m0), np.asarray(m1)), (nd, "moments")
+        assert np.array_equal(np.asarray(v0), np.asarray(v1)), (nd, "moments")
+    print("ENGINE_PARITY_OK")
+"""
+
+
+def test_engine_sharded_parity_2dev():
+    _run_multidevice(ENGINE_PARITY.format(shard_counts=(2,)), 2)
+
+
+def test_engine_sharded_parity_4dev():
+    _run_multidevice(ENGINE_PARITY.format(shard_counts=(2, 4)), 4)
+
+
+EVALUATOR_PARITY = """
+    import numpy as np, jax
+    from repro.experiments import paper_cnn
+    from repro.models import cnn
+    from repro.parallel import sharding as shd
+
+    params = cnn.init_params(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(42)
+    rng = np.random.default_rng(0)
+    n_images = 32
+
+    ev1 = paper_cnn.make_batched_evaluator(params, n_images)
+    for nd in {shard_counts}:
+        ev = paper_cnn.make_batched_evaluator(
+            params, n_images, mesh=shd.make_pop_mesh(nd))
+        # 1 (mesh wider than the padded pop), 5 (non-divisible), 32.
+        for pop in (1, 5, 32):
+            g = rng.integers(1, 9, (pop, cnn.N_SLOTS)).astype(np.int32)
+            a, b = ev1(g, key), ev(g, key)
+            assert np.array_equal(a, b), (nd, pop)
+    print("EVAL_PARITY_OK")
+"""
+
+
+def test_evaluator_sharded_parity_2dev():
+    _run_multidevice(EVALUATOR_PARITY.format(shard_counts=(2,)), 2)
+
+
+def test_evaluator_sharded_parity_4dev():
+    _run_multidevice(EVALUATOR_PARITY.format(shard_counts=(4,)), 4)
+
+
+def test_nsga_study_sharded_front_identical_2dev():
+    """End-to-end: a sharded mini nsga_study produces bitwise-identical
+    objectives (and hence the identical Pareto front) to single-device."""
+    _run_multidevice("""
+        import numpy as np, jax
+        from repro.experiments import paper_cnn
+        from repro.models import cnn
+        from repro.parallel import sharding as shd
+
+        params = cnn.init_params(jax.random.PRNGKey(0))
+        kwargs = dict(k=3, n_images=32, pop_size=8, generations=2, seed=0,
+                      log=None)
+        r1 = paper_cnn.nsga_study(params, **kwargs)
+        r2 = paper_cnn.nsga_study(params, mesh=shd.make_pop_mesh(2), **kwargs)
+        f1 = sorted(tuple(f["objectives"]) for f in r1["front"])
+        f2 = sorted(tuple(f["objectives"]) for f in r2["front"])
+        assert f1 == f2, (f1, f2)
+        assert r1["knee_objectives"] == r2["knee_objectives"]
+        print("STUDY_PARITY_OK")
+    """, 2)
+
+
+class _StubMesh:
+    """Duck-typed mesh: BatchEvaluator only reads dict(mesh.shape)[axis]."""
+
+    def __init__(self, n: int, axis: str = "pop"):
+        self.shape = {axis: n}
+
+
+def test_batch_evaluator_mesh_pads_and_strips():
+    """nsga2-level mesh path: batches reaching the objective are padded to a
+    mesh-axis multiple, results are stripped, the memo cache and telemetry
+    see only real genomes."""
+    from repro.core import nsga2
+
+    seen_sizes = []
+
+    def objectives_batch(genomes):
+        seen_sizes.append(genomes.shape[0])
+        return genomes.sum(axis=1, keepdims=True).astype(float)
+
+    ev = nsga2.BatchEvaluator(objectives_batch, mesh=_StubMesh(4))
+    genomes = [np.full(6, i, np.int32) for i in range(5)]  # 5 distinct
+    objs = ev(genomes)
+    assert all(s % 4 == 0 for s in seen_sizes), seen_sizes
+    assert [float(o[0]) for o in objs] == [i * 6.0 for i in range(5)]
+    assert ev.stats.genomes_scored == 5  # padding rows are not counted
+    # Cache: repeats are hits, no new evaluator call.
+    calls = len(seen_sizes)
+    ev(genomes[:2])
+    assert len(seen_sizes) == calls and ev.stats.cache_hits == 2
+
+
+def test_optimize_mesh_front_matches_unsharded():
+    """optimize(mesh=...) with a deterministic objective returns the same
+    front as the unsharded run (padding must not perturb the search)."""
+    from repro.core import nsga2
+
+    def objectives_batch(genomes):
+        g = genomes.astype(float)
+        return np.stack([g.sum(1), (g.max(1) - g.min(1))], axis=1)
+
+    kwargs = dict(genome_len=8, alphabet=(1, 2, 3), pop_size=8, generations=3,
+                  seed=5, objectives_batch=objectives_batch)
+    f1 = nsga2.optimize(**kwargs)
+    f2 = nsga2.optimize(mesh=_StubMesh(4), **kwargs)
+    o1 = sorted(tuple(ind.objectives) for ind in f1)
+    o2 = sorted(tuple(ind.objectives) for ind in f2)
+    assert o1 == o2
+
+
+def test_dryrun_respects_preset_xla_flags():
+    """launch/dryrun.py must not clobber a pre-set XLA_FLAGS, must add the
+    forced-device-count default otherwise, and must document the
+    run-as-own-process constraint in its module docstring."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    check = (
+        "import os; from repro.launch import dryrun; "
+        "flags = os.environ['XLA_FLAGS']; "
+        "assert flags.count('--xla_force_host_platform_device_count') == 1, flags; "
+        "assert '=2' in flags, flags; "
+        "assert 'own process' in (dryrun.__doc__ or ''), 'docstring'"
+    )
+    proc = subprocess.run([sys.executable, "-c", check], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    env.pop("XLA_FLAGS")
+    default = (
+        "import os; from repro.launch import dryrun; "
+        "assert '--xla_force_host_platform_device_count=512' "
+        "in os.environ['XLA_FLAGS']"
+    )
+    proc = subprocess.run([sys.executable, "-c", default], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
