@@ -288,6 +288,77 @@ def nsga2_sharded_bench(
     return out
 
 
+def foundry_bench(
+    n_char: int = 1 << 13,
+    n_variants: int = 4,
+    pop: int = 16,
+    n_images: int = 32,
+    iters: int = 3,
+) -> dict:
+    """Variant-foundry throughput: spec synthesis, bit-level characterization,
+    registration, and expanded-alphabet population evaluation.
+
+    Measures the cost of growing the search alphabet (persisted to
+    BENCH_foundry.json): map rendering is microseconds, characterization is
+    the bit-level emulation sweep (pairs/sec, exact baselines shared across
+    the family), and the expanded-alphabet evaluator row shows that scoring
+    genomes over K >= 16 variants costs the same as K = 9 — the moment
+    tables are gathered per call, so alphabet size never enters the GEMM.
+    Runs inside foundry.temporary_variants(): the live registry is restored.
+    """
+    from repro import foundry
+    from repro.core import schemes
+    from repro.experiments import paper_cnn
+    from repro.models import cnn
+
+    specs = foundry.default_family()[:n_variants]
+    out: dict = {"n_char": n_char, "n_variants": len(specs)}
+
+    t0 = time.time()
+    for s in specs:
+        s.to_map()
+    out["spec_to_map_us"] = (time.time() - t0) / len(specs) * 1e6
+
+    with foundry.temporary_variants():
+        t0 = time.time()
+        regs = foundry.register_family(specs, n=n_char)
+        reg_sec = time.time() - t0
+        out["register_family_sec"] = reg_sec
+        # 2 regimes x (1 exact baseline + n_variants approx sweeps).
+        pairs = n_char * 2 * (1 + len(specs))
+        out["characterize_pairs_per_sec"] = pairs / reg_sec
+        out["k_alphabet"] = len(schemes.VARIANTS)
+
+        try:
+            params = paper_cnn.load_params()
+        except FileNotFoundError:
+            params = cnn.init_params(jax.random.PRNGKey(0))
+        ev = paper_cnn.make_batched_evaluator(params, n_images)
+        rng = np.random.default_rng(0)
+        key = jax.random.PRNGKey(42)
+        rows = {}
+        for label, hi in (("seed_k9", 9), (f"expanded_k{out['k_alphabet']}",
+                                           out["k_alphabet"])):
+            pops = [rng.integers(0, hi, (pop, cnn.N_SLOTS)).astype(np.int32)
+                    for _ in range(iters + 1)]
+            ev(pops[0], key)  # compile
+            t0 = time.time()
+            for p in pops[1:]:
+                ev(p, key)
+            sec = (time.time() - t0) / iters
+            rows[label] = {"sec_per_generation": sec,
+                           "genomes_per_sec": pop / sec}
+        out["evaluator"] = rows
+
+    print(f"foundry_spec_to_map,{out['spec_to_map_us']:.1f},us_per_spec")
+    print(f"foundry_characterize_n{n_char}x{len(specs)},"
+          f"{reg_sec * 1e6:.1f},{out['characterize_pairs_per_sec']:.0f}_pairs_per_sec")
+    for label, r in rows.items():
+        print(f"foundry_eval_{label}_pop{pop},{r['sec_per_generation']*1e6:.1f},"
+              f"{r['genomes_per_sec']:.1f}_genomes_per_sec")
+    return out
+
+
 def main() -> None:
     """Host micro-benchmarks, routed through the AM engine."""
     rng = np.random.default_rng(0)

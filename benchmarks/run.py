@@ -6,8 +6,10 @@ Besides the printed sections, machine-readable metrics persist under
 artifacts/ so the perf trajectory is trackable across PRs (CI uploads them
 as workflow artifacts): BENCH_nsga2.json (search throughput: genomes/sec,
 wall-clock per generation, memo-cache hit rate, plus the "sharded" section —
-genomes/sec per forced-host-device count and the 2-device speedup) and
-BENCH_engine.json (per-backend AM engine matmul/conv timings).
+genomes/sec per forced-host-device count and the 2-device speedup),
+BENCH_engine.json (per-backend AM engine matmul/conv timings) and
+BENCH_foundry.json (variant-foundry synthesis/characterization throughput
+plus seed-vs-expanded alphabet evaluator rows).
 """
 from __future__ import annotations
 
@@ -20,6 +22,7 @@ from benchmarks import fig2_cnn, kernel_bench, roofline_summary, table1_hw, tabl
 ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
 BENCH_NSGA2 = ARTIFACTS / "BENCH_nsga2.json"
 BENCH_ENGINE = ARTIFACTS / "BENCH_engine.json"
+BENCH_FOUNDRY = ARTIFACTS / "BENCH_foundry.json"
 
 
 def _section(title: str, fn):
@@ -44,6 +47,14 @@ def main() -> None:
         ARTIFACTS.mkdir(exist_ok=True)
         BENCH_ENGINE.write_text(json.dumps(engine_metrics, indent=1))
         print(f"wrote {BENCH_ENGINE}")
+    foundry_metrics = _section(
+        "Variant foundry — synthesis/characterization/expanded-alphabet eval",
+        kernel_bench.foundry_bench,
+    )
+    if foundry_metrics is not None:
+        ARTIFACTS.mkdir(exist_ok=True)
+        BENCH_FOUNDRY.write_text(json.dumps(foundry_metrics, indent=1))
+        print(f"wrote {BENCH_FOUNDRY}")
     nsga2_metrics = _section(
         "NSGA-II search throughput — batched vs per-individual evaluation",
         kernel_bench.nsga2_bench,

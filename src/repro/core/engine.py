@@ -83,9 +83,24 @@ BITEXACT_AUTO_MAX_MULS = 1 << 14
 _REGISTERED_SEQUENCES: dict[str, np.ndarray] = {}
 
 
-def register_sequence(name: str, variant_ids) -> None:
-    """Register an optimized flat variant sequence under policy `seq:<name>`."""
+def register_sequence(name: str, variant_ids, *, overwrite: bool = False) -> None:
+    """Register an optimized flat variant sequence under policy `seq:<name>`.
+
+    Collisions raise unless ``overwrite=True`` (same contract as the variant
+    registry in core/schemes.py) — a silent overwrite would reroute every
+    consumer already holding the `seq:<name>` policy string.
+    """
+    if name in _REGISTERED_SEQUENCES and not overwrite:
+        raise ValueError(
+            f"sequence {name!r} already registered; pass overwrite=True to "
+            "replace it"
+        )
     _REGISTERED_SEQUENCES[name] = np.asarray(variant_ids, np.int32)
+
+
+def list_sequences() -> tuple[str, ...]:
+    """Names of registered `seq:<name>` policies, in registration order."""
+    return tuple(_REGISTERED_SEQUENCES)
 
 
 # ---------------------------------------------------------------------------

@@ -20,12 +20,14 @@ class ErrorReport:
     mre: float
     rmsre: float
     pred1_pct: float
+    mred: float = 0.0  # mean |relative error| (MRED)
 
     def row(self) -> str:
         return (
             f"{self.variant:12s} ER={self.error_rate_pct:7.3f}%  "
             f"MABE={self.mabe_bits:6.3f}  MRE={self.mre:+.3e}  "
-            f"RMSRE={self.rmsre:.3e}  PRED1={self.pred1_pct:6.2f}%"
+            f"MRED={self.mred:.3e}  RMSRE={self.rmsre:.3e}  "
+            f"PRED1={self.pred1_pct:6.2f}%"
         )
 
 
@@ -58,6 +60,7 @@ def error_metrics(
     ok = np.isfinite(exact) & (exact != 0) & np.isfinite(approx)
     rel = (approx[ok].astype(np.float64) - exact[ok]) / exact[ok].astype(np.float64)
     mre = float(np.mean(rel)) if rel.size else 0.0
+    mred = float(np.mean(np.abs(rel))) if rel.size else 0.0
     rmsre = float(np.sqrt(np.mean(rel**2))) if rel.size else 0.0
     pred = float(np.mean(np.abs(rel) <= tau_pct / 100.0) * 100.0) if rel.size else 100.0
 
@@ -69,6 +72,7 @@ def error_metrics(
         mre=mre,
         rmsre=rmsre,
         pred1_pct=pred,
+        mred=mred,
     )
 
 

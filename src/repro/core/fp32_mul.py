@@ -195,10 +195,13 @@ def fp32_multiply_interleaved(a, b, variant_ids, scheme_stack=None):
 
     Args:
       a, b: float32 (...,).
-      variant_ids: int32 (...,) in [0, 9) broadcastable to a's shape; 0 means
-        exact, 1..8 the paper's AMs (schemes.VARIANTS order).
-      scheme_stack: optional (9, 3, 48) int32 code stack; pass explicitly from
-        Pallas kernel bodies (kernels cannot capture array constants).
+      variant_ids: int32 (...,) in [0, N_VARIANTS) broadcastable to a's
+        shape; 0 means exact, 1..8 the paper's AMs, 9.. foundry-registered
+        variants (schemes.VARIANTS order).
+      scheme_stack: optional (N_VARIANTS, 3, 48) int32 code stack; pass
+        explicitly from Pallas kernel bodies (kernels cannot capture array
+        constants) — and from any caller holding a jitted closure across
+        foundry registrations, so the live stack is a traced operand.
     Returns:
       float32 (...,).
 
@@ -206,7 +209,7 @@ def fp32_multiply_interleaved(a, b, variant_ids, scheme_stack=None):
     its own variant. Implemented as a gather of (3, 48) code maps.
     """
     if scheme_stack is None:
-        scheme_stack = jnp.asarray(schemes.scheme_stack())  # (9, 3, 48)
+        scheme_stack = jnp.asarray(schemes.scheme_stack())  # (N_VARIANTS, 3, 48)
     codes = scheme_stack[jnp.asarray(variant_ids, _I32)]  # (..., 3, 48)
     return fp32_multiply(a, b, codes)
 
@@ -216,11 +219,19 @@ def fp32_multiply_interleaved(a, b, variant_ids, scheme_stack=None):
 _fp32_multiply_jit = jax.jit(fp32_multiply)
 
 
-def fp32_multiply_batch(a, b, variant: str, chunk: int = 1 << 16):
-    """Chunked jit evaluation over large 1-D batches (error-analysis runs)."""
+def fp32_multiply_batch(a, b, variant, chunk: int = 1 << 16):
+    """Chunked jit evaluation over large 1-D batches (error-analysis runs).
+
+    ``variant`` is a registered variant name or an explicit (3, 48) scheme
+    map — the latter lets the foundry characterize candidate placements
+    before they are registered.
+    """
     a = np.asarray(a, np.float32).ravel()
     b = np.asarray(b, np.float32).ravel()
-    codes = jnp.asarray(schemes.scheme_map(variant))
+    if isinstance(variant, str):
+        codes = jnp.asarray(schemes.scheme_map(variant))
+    else:
+        codes = jnp.asarray(schemes.validate_scheme_map(variant))
     outs = []
     for i in range(0, a.size, chunk):
         outs.append(

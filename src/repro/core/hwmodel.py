@@ -9,6 +9,13 @@ the paper's accounting method is reproduced exactly (Sec. III):
   * area is constant per *distinct* multiplier type used (multipliers are
     pre-implemented and reusable), so the NSGA-II area objective counts the
     distinct variants in a sequence.
+
+Variants beyond the paper's nine carry specs from the foundry's calibrated
+placement-cost model (repro.foundry.hwcost), registered at runtime via
+`register_variant`. The vectorized id-indexed lookups (``PDP_PJ`` /
+``AREA_UM2`` / ``POWER_UW`` / ``DELAY_PS``) are registry-backed module
+attributes rebuilt whenever the variant registry changes — read them as
+``hwmodel.PDP_PJ`` (attribute access), do not from-import them.
 """
 from __future__ import annotations
 
@@ -44,33 +51,105 @@ TABLE_I: dict[str, HwSpec] = {
     "nm_csi": HwSpec(3603.65, 110.472, 11698),
 }
 
-# Vectorized lookups indexed by variant id (schemes.VARIANTS order).
-PDP_PJ = np.array([TABLE_I[v].pdp_pj for v in schemes.VARIANTS])
-AREA_UM2 = np.array([TABLE_I[v].area_um2 for v in schemes.VARIANTS])
-POWER_UW = np.array([TABLE_I[v].power_uw for v in schemes.VARIANTS])
-DELAY_PS = np.array([TABLE_I[v].delay_ps for v in schemes.VARIANTS])
+# Runtime extension (foundry-registered variants), keyed by variant name.
+_EXTRA: dict[str, HwSpec] = {}
+_VERSION = 0
+_TABLE_CACHE: tuple[tuple[int, int], dict[str, np.ndarray]] | None = None
+
+
+def register_variant(name: str, spec: HwSpec, *, overwrite: bool = False) -> None:
+    """Attach a hardware spec to a (to-be-)registered variant name.
+
+    Mirrors the scheme-registry contract: collisions raise unless
+    ``overwrite=True``; the paper's Table I rows can never be replaced.
+    """
+    global _VERSION
+    if name in TABLE_I:
+        raise ValueError(f"paper Table I variant {name!r} cannot be re-registered")
+    if name in _EXTRA and not overwrite:
+        raise ValueError(
+            f"hw spec for {name!r} already registered; pass overwrite=True"
+        )
+    if not isinstance(spec, HwSpec):
+        raise TypeError(f"spec must be an HwSpec, got {type(spec)}")
+    _EXTRA[name] = spec
+    _VERSION += 1
+
+
+def unregister_variant(name: str) -> None:
+    global _VERSION
+    if name in TABLE_I:
+        raise ValueError(f"paper Table I variant {name!r} cannot be unregistered")
+    del _EXTRA[name]
+    _VERSION += 1
+
+
+def snapshot() -> tuple:
+    return (_VERSION, dict(_EXTRA))
+
+
+def restore(state: tuple) -> None:
+    global _VERSION
+    _, extra = state
+    _EXTRA.clear()
+    _EXTRA.update(extra)
+    _VERSION += 1
+
+
+def spec(name: str) -> HwSpec:
+    """Hardware spec for any registered variant (paper or foundry)."""
+    try:
+        return TABLE_I.get(name) or _EXTRA[name]
+    except KeyError:
+        raise KeyError(
+            f"variant {name!r} has no hardware spec; register one via "
+            "hwmodel.register_variant (foundry.register does this for you)"
+        ) from None
+
+
+def _tables() -> dict[str, np.ndarray]:
+    """Vectorized lookups indexed by variant id (schemes.VARIANTS order),
+    rebuilt when either the scheme registry or the spec table changes."""
+    global _TABLE_CACHE
+    key = (schemes.registry_version(), _VERSION)
+    if _TABLE_CACHE is None or _TABLE_CACHE[0] != key:
+        specs = [spec(v) for v in schemes.variant_names()]
+        _TABLE_CACHE = (key, {
+            "PDP_PJ": np.array([s.pdp_pj for s in specs]),
+            "AREA_UM2": np.array([s.area_um2 for s in specs]),
+            "POWER_UW": np.array([s.power_uw for s in specs]),
+            "DELAY_PS": np.array([s.delay_ps for s in specs]),
+        })
+    return _TABLE_CACHE[1]
+
+
+def __getattr__(name: str):
+    if name in ("PDP_PJ", "AREA_UM2", "POWER_UW", "DELAY_PS"):
+        return _tables()[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def pdp_benefit_pct(variant: str) -> float:
     """PDP benefit over the exact FP32 multiplier (paper Sec. II-B)."""
     e = TABLE_I["exact"].pdp_pj
-    return (e - TABLE_I[variant].pdp_pj) / e * 100.0
+    return (e - spec(variant).pdp_pj) / e * 100.0
 
 
 def sequence_cost(variant_ids: np.ndarray) -> dict[str, float]:
     """Hardware cost of a multiplier-slot sequence (paper's accounting).
 
     Args:
-      variant_ids: int array of per-slot variant ids (0 = exact, 1..8 = AMs).
+      variant_ids: int array of per-slot variant ids (0 = exact, 1.. = AMs).
     Returns:
       dict with total pdp (pJ), power (uW), delay (ps), area (um^2, distinct
       types only), and the PDP benefit vs an all-exact deployment.
     """
+    t = _tables()
     v = np.asarray(variant_ids).ravel()
-    pdp = float(PDP_PJ[v].sum())
-    power = float(POWER_UW[v].sum())
-    delay = float(DELAY_PS[v].sum())
-    area = float(AREA_UM2[np.unique(v)].sum())
+    pdp = float(t["PDP_PJ"][v].sum())
+    power = float(t["POWER_UW"][v].sum())
+    delay = float(t["DELAY_PS"][v].sum())
+    area = float(t["AREA_UM2"][np.unique(v)].sum())
     pdp_exact = TABLE_I["exact"].pdp_pj * v.size
     return {
         "n_slots": int(v.size),
@@ -93,15 +172,16 @@ def sequence_cost_batch(variant_ids: np.ndarray) -> dict[str, np.ndarray]:
       (``n_slots`` is int). Per-row area counts distinct types only, exactly
       matching the scalar accounting.
     """
+    t = _tables()
     v = np.atleast_2d(np.asarray(variant_ids))
     p, l = v.shape
-    pdp = PDP_PJ[v].sum(axis=1)
-    power = POWER_UW[v].sum(axis=1)
-    delay = DELAY_PS[v].sum(axis=1)
+    pdp = t["PDP_PJ"][v].sum(axis=1)
+    power = t["POWER_UW"][v].sum(axis=1)
+    delay = t["DELAY_PS"][v].sum(axis=1)
     # present[p, t] = type t appears in row p; area sums distinct types.
-    present = np.zeros((p, len(schemes.VARIANTS)), bool)
+    present = np.zeros((p, len(schemes.variant_names())), bool)
     np.put_along_axis(present, v, True, axis=1)
-    area = present @ AREA_UM2
+    area = present @ t["AREA_UM2"]
     pdp_exact = TABLE_I["exact"].pdp_pj * l
     return {
         "n_slots": np.full(p, l, int),

@@ -238,6 +238,7 @@ def optimize(
     position_agnostic: bool = False,
     mesh=None,
     pop_axis_name: str = "pop",
+    initial_genomes: Sequence[np.ndarray] | None = None,
     stats: EvalStats | None = None,
     log: Callable[[str], None] | None = None,
 ) -> list[Individual]:
@@ -265,6 +266,16 @@ def optimize(
         call and stripped after (see BatchEvaluator), so sharded population
         objectives always receive shard-divisible batches. The search
         trajectory is unchanged for any shard-invariant objective.
+      initial_genomes: optional warm-start genomes injected into the initial
+        population, filling from the tail and never displacing the
+        uniform-variant seed genomes (surplus warm genomes are dropped).
+        Used by the foundry study to
+        seed an expanded-alphabet search with a baseline Pareto front —
+        with a deterministic objective this guarantees the result can only
+        improve on the warm-start points. Genomes may use any variant ids
+        (e.g. a sub-alphabet); only mutation/crossover draw from
+        ``alphabet``. With ``initial_genomes=None`` the construction is
+        bit-identical to earlier releases.
       stats: optional ``EvalStats`` instance populated with batch-call /
         cache-hit telemetry.
     """
@@ -294,6 +305,19 @@ def optimize(
     # Seed uniform-variant genomes so single-AM deployments are reachable.
     for i, v in enumerate(alpha[: max(1, pop_size // 8)]):
         genomes[i] = np.full(genome_len, v, np.int32)
+    if initial_genomes is not None:
+        warm = [np.asarray(g, np.int32) for g in initial_genomes]
+        for g in warm:
+            if g.shape != (genome_len,):
+                raise ValueError(
+                    f"initial genome shape {g.shape} != ({genome_len},)"
+                )
+        # Fill from the tail, stopping short of the uniform seeds above so
+        # single-variant deployments of every alphabet entry stay reachable;
+        # surplus warm genomes beyond the remaining slots are dropped.
+        n_uniform = min(max(1, pop_size // 8), len(alpha))
+        for i, g in enumerate(warm[: pop_size - n_uniform]):
+            genomes[pop_size - 1 - i] = g
     objs = evaluator(genomes)
     pop = [Individual(genome=g, objectives=o) for g, o in zip(genomes, objs)]
     _rank_population(pop)
@@ -324,6 +348,26 @@ def optimize(
             log(f"gen {gen + 1}/{generations}: front0={len(f0)} best_last_obj={best:.4f}")
 
     return [ind for ind in pop if ind.rank == 0]
+
+
+def pareto_filter(objs: np.ndarray) -> np.ndarray:
+    """Indices of the non-dominated rows of an (P, M) objective array."""
+    return fast_non_dominated_sort(np.asarray(objs, float))[0]
+
+
+def front_weakly_dominates(front_objs, baseline_objs) -> bool:
+    """True iff every baseline point is weakly dominated by some front point.
+
+    Weak dominance here is componentwise <= (minimization); a front that
+    contains every baseline point trivially weakly dominates it. This is the
+    acceptance predicate of the foundry's expanded-alphabet study: the K>=16
+    front must not lose anything the K=9 alphabet already achieved.
+    """
+    a = np.atleast_2d(np.asarray(front_objs, float))
+    b = np.atleast_2d(np.asarray(baseline_objs, float))
+    if a.size == 0:
+        return b.size == 0
+    return bool(np.all((a[:, None, :] <= b[None, :, :]).all(-1).any(0)))
 
 
 def knee_point(front: list[Individual]) -> Individual:

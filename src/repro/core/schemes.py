@@ -12,6 +12,19 @@ Eight FP32 AM variants (paper Sec. II):
 A scheme map is an int32 (3, 48) array of compressor codes; maps broadcast
 against batch dims, and per-slot interleaving passes per-element stacks of
 these maps (see core/interleave.py).
+
+Variant registry
+----------------
+The variant alphabet is a runtime registry, not a frozen table: the nine seed
+variants (exact + the paper's eight) occupy ids 0..8 and can never be
+replaced, and `register_variant` appends new (3, 48) maps — the foundry
+(repro.foundry) synthesizes, characterizes and registers them. Ids are
+append-only positions, so every consumer that indexes by variant id
+(hwmodel cost tables, surrogate moment tables, engine scheme stacks) stays
+valid across registrations. `VARIANTS` / `AM_VARIANTS` / `VARIANT_IDS` /
+`N_VARIANTS` are computed per access (PEP 562 module __getattr__) and always
+reflect the live registry; read them as `schemes.VARIANTS`, do not
+from-import them.
 """
 from __future__ import annotations
 
@@ -23,8 +36,8 @@ N_STAGES = 3
 N_COLS = 48
 APPROX_COLS = 24  # columns [0, 24) are approximate
 
-# Variant ids: 0 is the exact multiplier; 1..8 the paper's eight AMs.
-VARIANTS = (
+# Seed variant ids: 0 is the exact multiplier; 1..8 the paper's eight AMs.
+SEED_VARIANTS = (
     "exact",
     "pm_ni",
     "pm_si",
@@ -35,9 +48,8 @@ VARIANTS = (
     "nm_ci",
     "nm_csi",
 )
-VARIANT_IDS = {name: i for i, name in enumerate(VARIANTS)}
-AM_VARIANTS = VARIANTS[1:]
-N_VARIANTS = len(VARIANTS)
+AM_SEED_VARIANTS = SEED_VARIANTS[1:]
+N_SEED_VARIANTS = len(SEED_VARIANTS)
 
 # Paper display names, e.g. FP32_PMCSI.
 PAPER_NAMES = {
@@ -57,8 +69,8 @@ def _base_map() -> np.ndarray:
     return np.full((N_STAGES, N_COLS), C.EXACT, dtype=np.int32)
 
 
-def scheme_map(variant: str) -> np.ndarray:
-    """Return the (3, 48) compressor-code map for a named variant."""
+def _seed_map(variant: str) -> np.ndarray:
+    """Construct a seed variant's (3, 48) map from the paper's pattern."""
     m = _base_map()
     if variant == "exact":
         return m
@@ -88,6 +100,115 @@ def scheme_map(variant: str) -> np.ndarray:
     return np.broadcast_to(fill, (N_STAGES, N_COLS)).astype(np.int32)
 
 
+# ---------------------------------------------------------------------------
+# Registry (insertion-ordered: position == variant id)
+# ---------------------------------------------------------------------------
+
+_MAPS: dict[str, np.ndarray] = {v: _seed_map(v) for v in SEED_VARIANTS}
+_VERSION = 0
+_STACK_CACHE: tuple[int, np.ndarray] | None = None
+
+
+def registry_version() -> int:
+    """Monotone counter bumped on every registry mutation (cache key for
+    derived tables in hwmodel / surrogate / engine consumers)."""
+    return _VERSION
+
+
+def variant_names() -> tuple[str, ...]:
+    """All registered variant names in id order (seed first, then foundry)."""
+    return tuple(_MAPS)
+
+
+def validate_scheme_map(m) -> np.ndarray:
+    """Validate and canonicalize a (3, 48) compressor-code map."""
+    arr = np.asarray(m)
+    if arr.shape != (N_STAGES, N_COLS):
+        raise ValueError(
+            f"scheme map shape {arr.shape} != ({N_STAGES}, {N_COLS})"
+        )
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise ValueError(f"scheme map dtype {arr.dtype} is not integral")
+    if arr.min() < 0 or arr.max() >= C.N_COMPRESSORS:
+        raise ValueError(
+            f"scheme map codes must be in [0, {C.N_COMPRESSORS}); "
+            f"got range [{arr.min()}, {arr.max()}]"
+        )
+    return arr.astype(np.int32, copy=True)
+
+
+def register_variant(name: str, scheme_map, *, overwrite: bool = False) -> int:
+    """Register (or with ``overwrite=True`` replace) a named variant map.
+
+    Returns the variant id. Seed variants (the paper's alphabet) can never
+    be replaced — their bit patterns are pinned by the golden fixtures.
+    Replacing an existing foundry variant keeps its id (append-only ids).
+    """
+    global _VERSION
+    if not name or not isinstance(name, str):
+        raise ValueError(f"variant name must be a non-empty string, got {name!r}")
+    if name in SEED_VARIANTS:
+        raise ValueError(f"seed variant {name!r} cannot be re-registered")
+    if name in _MAPS and not overwrite:
+        raise ValueError(
+            f"variant {name!r} already registered; pass overwrite=True to replace"
+        )
+    _MAPS[name] = validate_scheme_map(scheme_map)
+    _VERSION += 1
+    return variant_names().index(name)
+
+
+def unregister_variant(name: str) -> None:
+    """Remove a foundry variant. Ids of later-registered variants shift down;
+    intended for test isolation — prefer `snapshot`/`restore` around a batch
+    of registrations."""
+    global _VERSION
+    if name in SEED_VARIANTS:
+        raise ValueError(f"seed variant {name!r} cannot be unregistered")
+    if name not in _MAPS:
+        raise KeyError(name)
+    del _MAPS[name]
+    _VERSION += 1
+
+
+def snapshot() -> tuple:
+    """Opaque registry state for later `restore` (test isolation)."""
+    return (tuple(_MAPS), {k: v.copy() for k, v in _MAPS.items()})
+
+
+def restore(state: tuple) -> None:
+    global _VERSION
+    order, maps = state
+    _MAPS.clear()
+    for k in order:
+        _MAPS[k] = maps[k]
+    _VERSION += 1
+
+
+def scheme_map(variant: str) -> np.ndarray:
+    """Return the (3, 48) compressor-code map for a registered variant."""
+    try:
+        return _MAPS[variant].copy()
+    except KeyError:
+        raise ValueError(f"unknown variant {variant!r}") from None
+
+
 def scheme_stack() -> np.ndarray:
-    """(9, 3, 48) stack of all variant maps, indexed by variant id."""
-    return np.stack([scheme_map(v) for v in VARIANTS], axis=0)
+    """(N_VARIANTS, 3, 48) stack of all variant maps, indexed by variant id."""
+    global _STACK_CACHE
+    if _STACK_CACHE is None or _STACK_CACHE[0] != _VERSION:
+        _STACK_CACHE = (_VERSION, np.stack(list(_MAPS.values()), axis=0))
+    return _STACK_CACHE[1]
+
+
+def __getattr__(name: str):
+    # Live views over the registry (PEP 562): always reflect registrations.
+    if name == "VARIANTS":
+        return variant_names()
+    if name == "AM_VARIANTS":
+        return variant_names()[1:]
+    if name == "VARIANT_IDS":
+        return {n: i for i, n in enumerate(_MAPS)}
+    if name == "N_VARIANTS":
+        return len(_MAPS)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

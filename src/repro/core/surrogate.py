@@ -18,10 +18,16 @@ so  y  =  x @ (w (1+mu))  +  z * sqrt((x^2) @ (w^2 sigma^2)),  z ~ N(0,1).
 This runs *on* the MXU (2 matmuls + elementwise) and is exact in distribution
 for the first two moments; tests/test_surrogate.py validates both calibration
 and the matmul moments against the bit-exact path.
+
+The seed alphabet's stats are calibrated once (disk-cached); foundry-
+registered variants supply their stats at registration time
+(`register_moments`, fed by repro.foundry.characterize), and
+`moment_tables()` rebuilds whenever the variant registry changes so every
+surrogate consumer — engine backends, the NSGA-II population evaluator, the
+sharded search — sees the extended alphabet without re-tracing host code.
 """
 from __future__ import annotations
 
-import functools
 import json
 import pathlib
 
@@ -36,50 +42,136 @@ _CACHE_FILE = pathlib.Path(__file__).with_name("_surrogate_stats.json")
 _CALIB_N = 1 << 18
 _CALIB_SEED = 1234
 
+# Foundry-registered relative-error stats, keyed by variant name.
+_EXTRA_STATS: dict[str, dict[str, float]] = {}
+_VERSION = 0
+_SEED_STATS: dict[str, dict[str, float]] | None = None
+_STATS_CACHE: tuple[tuple[int, int], dict[str, dict[str, float]]] | None = None
+_MOMENTS_CACHE: tuple[tuple[int, int], tuple[np.ndarray, np.ndarray]] | None = None
 
-def _calibrate() -> dict[str, dict[str, float]]:
-    rng = np.random.default_rng(_CALIB_SEED)
-    a = rng.standard_normal(_CALIB_N, dtype=np.float32)
-    b = rng.standard_normal(_CALIB_N, dtype=np.float32)
+
+def calibrate_moments(
+    scheme_codes, n: int = _CALIB_N, seed: int = _CALIB_SEED
+) -> dict[str, float]:
+    """Relative-error moments of one scheme map on standard-normal operands.
+
+    The calibration the surrogate's (mu, sigma) tables are built from; the
+    foundry reuses it (with smaller n, sized for the build box) when
+    characterizing new placements.
+    """
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal(n, dtype=np.float32)
+    b = rng.standard_normal(n, dtype=np.float32)
     exact = fp32_mul.fp32_multiply_batch(a, b, "exact")
+    ap = fp32_mul.fp32_multiply_batch(a, b, scheme_codes)
+    ok = np.isfinite(exact) & (exact != 0)
+    rel = (ap[ok].astype(np.float64) - exact[ok]) / exact[ok].astype(np.float64)
+    return {"mre": float(rel.mean()), "rmsre": float(np.sqrt((rel**2).mean()))}
+
+
+def _calibrate_seed() -> dict[str, dict[str, float]]:
     stats: dict[str, dict[str, float]] = {
         "exact": {"mre": 0.0, "rmsre": 0.0},
     }
-    for v in schemes.AM_VARIANTS:
-        ap = fp32_mul.fp32_multiply_batch(a, b, v)
-        ok = np.isfinite(exact) & (exact != 0)
-        rel = (ap[ok].astype(np.float64) - exact[ok]) / exact[ok].astype(np.float64)
-        stats[v] = {"mre": float(rel.mean()), "rmsre": float(np.sqrt((rel**2).mean()))}
+    for v in schemes.AM_SEED_VARIANTS:
+        stats[v] = calibrate_moments(schemes.scheme_map(v))
     return stats
 
 
-@functools.lru_cache(maxsize=1)
-def variant_stats() -> dict[str, dict[str, float]]:
-    """Per-variant relative-error moments, cached on disk for reuse."""
+def _seed_variant_stats() -> dict[str, dict[str, float]]:
+    """Seed-alphabet stats, calibrated once and cached on disk for reuse."""
+    global _SEED_STATS
+    if _SEED_STATS is not None:
+        return _SEED_STATS
     if _CACHE_FILE.exists():
-        return json.loads(_CACHE_FILE.read_text())
-    stats = _calibrate()
+        _SEED_STATS = json.loads(_CACHE_FILE.read_text())
+        return _SEED_STATS
+    _SEED_STATS = _calibrate_seed()
     try:
-        _CACHE_FILE.write_text(json.dumps(stats, indent=1))
+        _CACHE_FILE.write_text(json.dumps(_SEED_STATS, indent=1))
     except OSError:
         pass
-    return stats
+    return _SEED_STATS
 
 
-@functools.lru_cache(maxsize=1)
+def register_moments(
+    name: str, mre: float, rmsre: float, *, overwrite: bool = False
+) -> None:
+    """Attach calibrated relative-error moments to a foundry variant name.
+
+    Mirrors the scheme-registry contract: collisions raise unless
+    ``overwrite=True``; seed-variant stats can never be replaced.
+    """
+    global _VERSION
+    if name in schemes.SEED_VARIANTS:
+        raise ValueError(f"seed variant {name!r} stats cannot be re-registered")
+    if name in _EXTRA_STATS and not overwrite:
+        raise ValueError(
+            f"moments for {name!r} already registered; pass overwrite=True"
+        )
+    _EXTRA_STATS[name] = {"mre": float(mre), "rmsre": float(rmsre)}
+    _VERSION += 1
+
+
+def unregister_moments(name: str) -> None:
+    global _VERSION
+    del _EXTRA_STATS[name]
+    _VERSION += 1
+
+
+def snapshot() -> tuple:
+    return (_VERSION, {k: dict(v) for k, v in _EXTRA_STATS.items()})
+
+
+def restore(state: tuple) -> None:
+    global _VERSION
+    _, extra = state
+    _EXTRA_STATS.clear()
+    _EXTRA_STATS.update(extra)
+    _VERSION += 1
+
+
+def _cache_key() -> tuple[int, int]:
+    return (schemes.registry_version(), _VERSION)
+
+
+def variant_stats() -> dict[str, dict[str, float]]:
+    """Per-variant relative-error moments for the live alphabet, id order."""
+    global _STATS_CACHE
+    key = _cache_key()
+    if _STATS_CACHE is None or _STATS_CACHE[0] != key:
+        seed = _seed_variant_stats()
+        stats: dict[str, dict[str, float]] = {}
+        for v in schemes.variant_names():
+            st = seed.get(v) or _EXTRA_STATS.get(v)
+            if st is None:
+                raise KeyError(
+                    f"variant {v!r} has no calibrated moments; register them "
+                    "via surrogate.register_moments (foundry.register does "
+                    "this for you)"
+                )
+            stats[v] = st
+        _STATS_CACHE = (key, stats)
+    return _STATS_CACHE[1]
+
+
 def moment_tables() -> tuple[np.ndarray, np.ndarray]:
     """(mu, sigma) float32 arrays indexed by variant id (schemes.VARIANTS)."""
-    st = variant_stats()
-    mu = np.array([st[v]["mre"] for v in schemes.VARIANTS], np.float32)
-    # sigma^2 = RMSRE^2 - MRE^2 (centered second moment).
-    sg = np.array(
-        [
-            np.sqrt(max(st[v]["rmsre"] ** 2 - st[v]["mre"] ** 2, 0.0))
-            for v in schemes.VARIANTS
-        ],
-        np.float32,
-    )
-    return mu, sg
+    global _MOMENTS_CACHE
+    key = _cache_key()
+    if _MOMENTS_CACHE is None or _MOMENTS_CACHE[0] != key:
+        st = variant_stats()
+        mu = np.array([st[v]["mre"] for v in st], np.float32)
+        # sigma^2 = RMSRE^2 - MRE^2 (centered second moment).
+        sg = np.array(
+            [
+                np.sqrt(max(st[v]["rmsre"] ** 2 - st[v]["mre"] ** 2, 0.0))
+                for v in st
+            ],
+            np.float32,
+        )
+        _MOMENTS_CACHE = (key, (mu, sg))
+    return _MOMENTS_CACHE[1]
 
 
 def tile_moments(variant_tiles, k: int, n: int, tile_k: int, tile_n: int):

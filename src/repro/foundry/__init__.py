@@ -1,0 +1,73 @@
+"""Variant foundry: synthesize, characterize and register approximate-FP32
+multipliers beyond the paper's eight, growing the NSGA-II search alphabet.
+
+Pipeline (each stage usable standalone):
+
+  spec         declarative compressor-placement specs over the (3, 48)
+               scheme-map grammar + family generators (column-depth sweeps,
+               stage checkerboards, mixed PC/NC gradients)
+  characterize blocked bit-level error characterization (ER/MRED/moments)
+               against core/fp32_mul + surrogate (mu, sigma) calibration
+  hwcost       placement-feature cost model calibrated to reproduce the
+               paper's Table I exactly on the eight seed variants
+  registry     foundry.register(spec) — one call provisions the scheme map,
+               hardware spec and surrogate moments across every consumer
+               (all five engine backends, hwmodel objectives, the sharded
+               NSGA-II search)
+
+Quickstart:
+
+    from repro import foundry
+    spec = foundry.PlacementSpec(
+        "pc1_d16", regions=(foundry.Region(code=1, cols=(0, 16)),))
+    reg = foundry.register(spec)          # characterize + cost + register
+    # `reg.variant_id` is now valid in every slot map / alphabet.
+
+`experiments/paper_cnn.py::foundry_study` uses `default_family()` to expand
+the alphabet to K>=16 and re-runs the interleaving search.
+"""
+from repro.foundry.characterize import (
+    Characterization,
+    characterize,
+    characterize_family,
+)
+from repro.foundry.hwcost import CostModel, calibrate, features
+from repro.foundry.registry import (
+    RegisteredVariant,
+    list_variants,
+    register,
+    register_family,
+    temporary_variants,
+    unregister,
+)
+from repro.foundry.spec import (
+    PlacementSpec,
+    Region,
+    column_depth_family,
+    default_family,
+    gradient_family,
+    spec_from_map,
+    stage_checkerboard_family,
+)
+
+__all__ = [
+    "Characterization",
+    "CostModel",
+    "PlacementSpec",
+    "RegisteredVariant",
+    "Region",
+    "calibrate",
+    "characterize",
+    "characterize_family",
+    "column_depth_family",
+    "default_family",
+    "features",
+    "gradient_family",
+    "list_variants",
+    "register",
+    "register_family",
+    "spec_from_map",
+    "stage_checkerboard_family",
+    "temporary_variants",
+    "unregister",
+]

@@ -1,0 +1,152 @@
+"""Bit-level error characterization of candidate placements.
+
+Runs the emulated multiplier (core/fp32_mul.py) over two operand regimes:
+
+  * wide random FP32 pairs (core/errors.py::random_fp32_operands — the
+    paper's Table II methodology): ER / MABE / MRE / MRED / RMSRE / PRED_1;
+  * standard-normal pairs (the distribution matmul inputs actually see):
+    surrogate (mu, sigma) calibration, matching core/surrogate.py exactly.
+
+Everything is blocked and batched for the 2-core build box: operands are
+processed in jit-compiled chunks (fp32_mul.fp32_multiply_batch) and the two
+exact baselines are computed once per (n, seed) and shared across a whole
+family of candidate specs — characterizing K extra variants costs K + 2
+emulation sweeps, not 2K.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core import errors, fp32_mul, schemes
+
+import repro.foundry.spec as fspec
+
+# Default sample size: ~1.5 s per variant sweep on the 2-core box; the seed
+# surrogate calibration uses 2^18 — bump `n` for publication-grade moments.
+DEFAULT_N = 1 << 16
+DEFAULT_SEED = 1234
+
+
+@dataclasses.dataclass(frozen=True)
+class Characterization:
+    """Error characterization of one placement (wide + normal regimes)."""
+
+    name: str
+    n: int
+    seed: int
+    # Wide-operand regime (Table II methodology).
+    error_rate_pct: float
+    mabe_bits: float
+    mre: float
+    mred: float
+    rmsre: float
+    pred1_pct: float
+    # Standard-normal regime (surrogate calibration).
+    mu: float
+    sigma: float
+    mre_normal: float
+    rmsre_normal: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def row(self) -> str:
+        return (
+            f"{self.name:16s} ER={self.error_rate_pct:7.3f}%  "
+            f"MRED={self.mred:.3e}  RMSRE={self.rmsre:.3e}  "
+            f"mu={self.mu:+.3e}  sigma={self.sigma:.3e}"
+        )
+
+
+def _as_map(spec_or_map) -> tuple[str, np.ndarray]:
+    if isinstance(spec_or_map, fspec.PlacementSpec):
+        return spec_or_map.name, spec_or_map.to_map()
+    if isinstance(spec_or_map, str):
+        return spec_or_map, schemes.scheme_map(spec_or_map)
+    return "", schemes.validate_scheme_map(spec_or_map)
+
+
+@functools.lru_cache(maxsize=8)
+def _wide_operands(n: int, seed: int):
+    return errors.random_fp32_operands(n, seed=seed)
+
+
+@functools.lru_cache(maxsize=8)
+def _wide_exact(n: int, seed: int) -> np.ndarray:
+    a, b = _wide_operands(n, seed)
+    return fp32_mul.fp32_multiply_batch(a, b, "exact")
+
+
+@functools.lru_cache(maxsize=8)
+def _normal_operands(n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.standard_normal(n, dtype=np.float32),
+        rng.standard_normal(n, dtype=np.float32),
+    )
+
+
+@functools.lru_cache(maxsize=8)
+def _normal_exact(n: int, seed: int) -> np.ndarray:
+    a, b = _normal_operands(n, seed)
+    return fp32_mul.fp32_multiply_batch(a, b, "exact")
+
+
+def characterize(
+    spec_or_map,
+    *,
+    n: int = DEFAULT_N,
+    seed: int = DEFAULT_SEED,
+    name: str = "",
+    chunk: int = 1 << 15,
+) -> Characterization:
+    """Full error characterization of a spec / named variant / raw map."""
+    auto_name, m = _as_map(spec_or_map)
+    name = name or auto_name or "anonymous"
+
+    a, b = _wide_operands(n, seed)
+    exact = _wide_exact(n, seed)
+    approx = fp32_mul.fp32_multiply_batch(a, b, m, chunk=chunk)
+    rep = errors.error_metrics(approx, exact, name)
+
+    an, bn = _normal_operands(n, seed)
+    exact_n = _normal_exact(n, seed)
+    approx_n = fp32_mul.fp32_multiply_batch(an, bn, m, chunk=chunk)
+    ok = np.isfinite(exact_n) & (exact_n != 0)
+    rel = (approx_n[ok].astype(np.float64) - exact_n[ok]) / exact_n[ok].astype(
+        np.float64
+    )
+    mre_n = float(rel.mean()) if rel.size else 0.0
+    rmsre_n = float(np.sqrt((rel**2).mean())) if rel.size else 0.0
+
+    return Characterization(
+        name=name,
+        n=n,
+        seed=seed,
+        error_rate_pct=rep.error_rate_pct,
+        mabe_bits=rep.mabe_bits,
+        mre=rep.mre,
+        mred=rep.mred,
+        rmsre=rep.rmsre,
+        pred1_pct=rep.pred1_pct,
+        mu=mre_n,
+        sigma=float(np.sqrt(max(rmsre_n**2 - mre_n**2, 0.0))),
+        mre_normal=mre_n,
+        rmsre_normal=rmsre_n,
+    )
+
+
+def characterize_family(
+    specs, *, n: int = DEFAULT_N, seed: int = DEFAULT_SEED, log=None
+) -> list[Characterization]:
+    """Characterize a family of specs, sharing the exact baselines."""
+    out = []
+    for s in specs:
+        c = characterize(s, n=n, seed=seed)
+        if log:
+            log(c.row())
+        out.append(c)
+    return out

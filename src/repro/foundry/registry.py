@@ -1,0 +1,171 @@
+"""Foundry registration: provision a placement spec across every consumer.
+
+`register(spec)` is the one-call path from a declarative placement to a live
+engine variant:
+
+  1. characterize — bit-level error sweep + surrogate (mu, sigma) moments
+     (repro.foundry.characterize);
+  2. cost — area/power/delay from the calibrated placement-cost model
+     (repro.foundry.hwcost);
+  3. provision — surrogate.register_moments + hwmodel.register_variant
+     first, then schemes.register_variant *last*, so the variant id only
+     becomes visible once every id-indexed table can serve it. From that
+     point the variant works in all five engine backends (the bit-exact
+     paths gather its map from schemes.scheme_stack(); the surrogate paths
+     gather its moments from surrogate.moment_tables()), in hwmodel
+     objectives, and in the (sharded) NSGA-II search.
+
+The registry contract mirrors core/engine.py::register_sequence: collisions
+raise unless ``overwrite=True``; seed variants can never be replaced.
+`temporary_variants()` snapshots and restores all three module registries —
+use it around registrations in tests and benchmarks.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import numpy as np
+
+from repro.core import hwmodel, schemes, surrogate
+
+# Submodule handles via sys.modules: the package re-exports a `characterize`
+# *function* that shadows the submodule attribute on the package object.
+import sys
+
+import repro.foundry.characterize  # noqa: F401
+import repro.foundry.hwcost  # noqa: F401
+import repro.foundry.spec  # noqa: F401
+
+fchar = sys.modules["repro.foundry.characterize"]
+hwcost = sys.modules["repro.foundry.hwcost"]
+fspec = sys.modules["repro.foundry.spec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisteredVariant:
+    name: str
+    variant_id: int
+    spec: fspec.PlacementSpec | None
+    characterization: fchar.Characterization
+    hw: hwmodel.HwSpec
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "variant_id": self.variant_id,
+            "characterization": self.characterization.as_dict(),
+            "hw": dataclasses.asdict(self.hw),
+            "pdp_pj": self.hw.pdp_pj,
+            "description": self.spec.description if self.spec else "",
+        }
+
+
+def list_variants() -> tuple[str, ...]:
+    """All live variant names in id order (seed alphabet first)."""
+    return schemes.variant_names()
+
+
+def register(
+    spec_or_map,
+    *,
+    name: str = "",
+    n: int = fchar.DEFAULT_N,
+    seed: int = fchar.DEFAULT_SEED,
+    characterization: fchar.Characterization | None = None,
+    hw: hwmodel.HwSpec | None = None,
+    overwrite: bool = False,
+) -> RegisteredVariant:
+    """Synthesize, characterize, cost and register one variant.
+
+    Accepts a PlacementSpec or a raw (3, 48) map (then ``name`` is
+    required). Pass ``characterization`` / ``hw`` to reuse precomputed
+    results (e.g. a high-n offline sweep); both default to being computed
+    here, sized by ``n`` for the build box.
+    """
+    if isinstance(spec_or_map, fspec.PlacementSpec):
+        spec, m = spec_or_map, spec_or_map.to_map()
+        name = name or spec.name
+    else:
+        spec, m = None, schemes.validate_scheme_map(spec_or_map)
+        if not name:
+            raise ValueError("registering a raw map requires a name")
+    if name in schemes.SEED_VARIANTS:
+        raise ValueError(f"seed variant {name!r} cannot be re-registered")
+    if name in schemes.variant_names() and not overwrite:
+        raise ValueError(
+            f"variant {name!r} already registered; pass overwrite=True"
+        )
+
+    char = characterization or fchar.characterize(m, n=n, seed=seed, name=name)
+    hw = hw or hwcost.predict(m)
+
+    # Provision id-indexed tables before the id becomes visible; restore the
+    # pre-call registry state on failure so a rejected register() leaves no
+    # orphaned entries blocking the retry (and an overwrite that fails
+    # half-way keeps the previous registration intact).
+    states = (schemes.snapshot(), hwmodel.snapshot(), surrogate.snapshot())
+    try:
+        surrogate.register_moments(
+            name, char.mre_normal, char.rmsre_normal, overwrite=overwrite
+        )
+        hwmodel.register_variant(name, hw, overwrite=overwrite)
+        vid = schemes.register_variant(name, m, overwrite=overwrite)
+    except BaseException:
+        schemes.restore(states[0])
+        hwmodel.restore(states[1])
+        surrogate.restore(states[2])
+        raise
+    return RegisteredVariant(
+        name=name, variant_id=vid, spec=spec, characterization=char, hw=hw
+    )
+
+
+def register_family(
+    specs,
+    *,
+    n: int = fchar.DEFAULT_N,
+    seed: int = fchar.DEFAULT_SEED,
+    overwrite: bool = False,
+    log=None,
+) -> list[RegisteredVariant]:
+    """Register a family of specs (shared exact characterization baselines)."""
+    out = []
+    for s in specs:
+        r = register(s, n=n, seed=seed, overwrite=overwrite)
+        if log:
+            log(f"registered {r.name} as id {r.variant_id}: "
+                f"{r.characterization.row()} pdp={r.hw.pdp_pj:.3f}pJ")
+        out.append(r)
+    return out
+
+
+def unregister(name: str) -> None:
+    """Remove a foundry variant from all three registries (test isolation;
+    ids of later-registered variants shift — prefer `temporary_variants`).
+    Tolerates partial registrations: raises KeyError only if the name is
+    known to none of the registries."""
+    found = False
+    for drop in (schemes.unregister_variant, surrogate.unregister_moments,
+                 hwmodel.unregister_variant):
+        try:
+            drop(name)
+            found = True
+        except KeyError:
+            pass
+    if not found:
+        raise KeyError(name)
+
+
+@contextlib.contextmanager
+def temporary_variants():
+    """Scope foundry registrations: restores the scheme/hw/surrogate
+    registries on exit, so tests and benchmarks leave the seed alphabet
+    (and every id-indexed consumer) exactly as found."""
+    states = (schemes.snapshot(), hwmodel.snapshot(), surrogate.snapshot())
+    try:
+        yield
+    finally:
+        schemes.restore(states[0])
+        hwmodel.restore(states[1])
+        surrogate.restore(states[2])

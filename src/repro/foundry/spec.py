@@ -1,0 +1,249 @@
+"""Declarative compressor-placement specs over the (3, 48) scheme-map grammar.
+
+A `PlacementSpec` is an ordered list of `Region`s painted onto the exact
+(all-EXACT) base map — later regions override earlier ones, exactly like
+layered selections. Each region addresses a stage subset and a strided
+column range and assigns one compressor code (core/compressors.py:
+EXACT/PC1/PC2/NC1/NC2). The paper's eight variants are expressible in this
+grammar (NI = one full-region code, SI/CI/CSI = two interleaved regions);
+the family generators below go beyond them: column-depth sweeps, generalized
+stage/column checkerboards with period > 1, and mixed PC->NC gradients.
+
+Approximate codes are restricted to columns [0, APPROX_COLS) by default —
+the paper's safe envelope (errors stay below the output mantissa's weight).
+Pass ``max_col`` explicitly to explore deeper placements.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import compressors as C
+from repro.core import schemes
+
+_CODES = (C.EXACT, C.PC1, C.PC2, C.NC1, C.NC2)
+_PC_CODES = (C.PC1, C.PC2)
+_NC_CODES = (C.NC1, C.NC2)
+_CODE_BY_NAME = {name.lower(): code for code, name in C.CODE_NAMES.items()}
+
+
+def resolve_code(code) -> int:
+    """Accept a compressor code int or name ("pc1", "NC2", ...)."""
+    if isinstance(code, str):
+        try:
+            return _CODE_BY_NAME[code.lower()]
+        except KeyError:
+            raise ValueError(
+                f"unknown compressor code {code!r}; have {sorted(_CODE_BY_NAME)}"
+            ) from None
+    code = int(code)
+    if code not in _CODES:
+        raise ValueError(f"compressor code {code} not in {_CODES}")
+    return code
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """One painted placement region.
+
+    code:   compressor code (int or name) applied to every addressed cell.
+    stages: stage subset, each in [0, 3).
+    cols:   [start, stop) column range.
+    step:   column stride within the range (>= 1).
+    phase:  offset of the first painted column relative to ``cols[0]``.
+    """
+
+    code: int | str
+    stages: tuple[int, ...] = (0, 1, 2)
+    cols: tuple[int, int] = (0, schemes.APPROX_COLS)
+    step: int = 1
+    phase: int = 0
+
+    def validate(self, max_col: int = schemes.APPROX_COLS) -> None:
+        code = resolve_code(self.code)
+        if not self.stages:
+            raise ValueError("region addresses no stages")
+        if any(s not in range(schemes.N_STAGES) for s in self.stages):
+            raise ValueError(f"stages {self.stages} outside [0, {schemes.N_STAGES})")
+        lo, hi = self.cols
+        if not (0 <= lo < hi <= schemes.N_COLS):
+            raise ValueError(f"column range {self.cols} outside [0, {schemes.N_COLS}]")
+        if code != C.EXACT and hi > max_col:
+            raise ValueError(
+                f"approximate region reaches column {hi} > max_col {max_col} "
+                "(pass max_col explicitly to explore deeper placements)"
+            )
+        if self.step < 1:
+            raise ValueError(f"step must be >= 1, got {self.step}")
+        if not (0 <= self.phase < self.step):
+            raise ValueError(f"phase {self.phase} outside [0, step={self.step})")
+
+    def paint(self, m: np.ndarray) -> None:
+        lo, hi = self.cols
+        cols = np.arange(lo + self.phase, hi, self.step)
+        for s in self.stages:
+            m[s, cols] = resolve_code(self.code)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementSpec:
+    """A named, validated placement over the exact base map."""
+
+    name: str
+    regions: tuple[Region, ...] = ()
+    description: str = ""
+    max_col: int = schemes.APPROX_COLS
+
+    def __post_init__(self):
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError(f"spec name must be a non-empty string, got {self.name!r}")
+        object.__setattr__(self, "regions", tuple(self.regions))
+        for r in self.regions:
+            r.validate(self.max_col)
+
+    def to_map(self) -> np.ndarray:
+        """Render the (3, 48) int32 compressor-code map."""
+        m = np.full((schemes.N_STAGES, schemes.N_COLS), C.EXACT, np.int32)
+        for r in self.regions:
+            r.paint(m)
+        return m
+
+    @property
+    def n_approx(self) -> int:
+        return int(np.count_nonzero(self.to_map() != C.EXACT))
+
+    def codes_used(self) -> tuple[int, ...]:
+        m = self.to_map()
+        return tuple(sorted(set(int(c) for c in np.unique(m)) - {C.EXACT}))
+
+    def is_pc_only(self) -> bool:
+        return bool(self.codes_used()) and all(
+            c in _PC_CODES for c in self.codes_used()
+        )
+
+    def is_nc_only(self) -> bool:
+        return bool(self.codes_used()) and all(
+            c in _NC_CODES for c in self.codes_used()
+        )
+
+
+def spec_from_map(name: str, scheme_map, description: str = "") -> PlacementSpec:
+    """Lift an arbitrary validated (3, 48) map into spec form (one region per
+    painted cell run is overkill; we store per-stage column runs)."""
+    m = schemes.validate_scheme_map(scheme_map)
+    regions: list[Region] = []
+    for s in range(schemes.N_STAGES):
+        c = 0
+        while c < schemes.N_COLS:
+            code = int(m[s, c])
+            c1 = c
+            while c1 < schemes.N_COLS and int(m[s, c1]) == code:
+                c1 += 1
+            if code != C.EXACT:
+                regions.append(Region(code=code, stages=(s,), cols=(c, c1)))
+            c = c1
+    return PlacementSpec(
+        name, tuple(regions), description or "lifted from explicit map",
+        max_col=schemes.N_COLS,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Family generators (beyond the paper's NI/SI/CI/CSI patterns)
+# ---------------------------------------------------------------------------
+
+
+def column_depth_family(
+    depths=(8, 16), codes=("pc1", "nc1", "pc2", "nc2")
+) -> tuple[PlacementSpec, ...]:
+    """NI-style single-code placements with swept approximate-column depth.
+
+    The paper fixes depth 24; shallower placements trade hardware benefit for
+    error, and the PC2/NC2 codes (unused by the paper's alphabet) add more
+    aggressive per-compressor error at the same depth.
+    """
+    specs = []
+    for code in codes:
+        c = resolve_code(code)
+        for d in depths:
+            specs.append(PlacementSpec(
+                f"fnd_{C.CODE_NAMES[c].lower()}_d{d:02d}",
+                (Region(code=c, cols=(0, d)),),
+                f"uniform {C.CODE_NAMES[c]} in columns [0, {d}), all stages",
+            ))
+    return tuple(specs)
+
+
+def stage_checkerboard_family(
+    periods=(2, 3), depth: int = schemes.APPROX_COLS,
+    pc="pc1", nc="nc1",
+) -> tuple[PlacementSpec, ...]:
+    """Generalized CSI: code alternates with column period p and stage phase.
+
+    period 1 column-blocks degenerate to the paper's CSI; periods >= 2 create
+    coarser checkerboards whose error correlation structure differs from any
+    paper variant.
+    """
+    pc, nc = resolve_code(pc), resolve_code(nc)
+    specs = []
+    for p in periods:
+        for lead, trail, tag in ((pc, nc, "p"), (nc, pc, "n")):
+            regions = []
+            for s in range(schemes.N_STAGES):
+                for c0 in range(0, depth, p):
+                    code = lead if ((s + c0 // p) % 2 == 0) else trail
+                    regions.append(Region(
+                        code=code, stages=(s,), cols=(c0, min(c0 + p, depth))
+                    ))
+            specs.append(PlacementSpec(
+                f"fnd_{tag}m_ckb{p}",
+                tuple(regions),
+                f"stage+column checkerboard, column period {p}, "
+                f"{'PC' if lead == pc else 'NC'} leading",
+            ))
+    return tuple(specs)
+
+
+def gradient_family(
+    splits=(8, 16), depth: int = schemes.APPROX_COLS, pc="pc1", nc="nc1",
+) -> tuple[PlacementSpec, ...]:
+    """Mixed PC/NC gradients: one code in the low columns, the other above.
+
+    Low columns carry low-significance error, so a gradient concentrates the
+    aggressive code where it is cheap and flips polarity where it matters —
+    a placement axis none of the paper's patterns explores.
+    """
+    pc, nc = resolve_code(pc), resolve_code(nc)
+    specs = []
+    for split in splits:
+        if not 0 < split < depth:
+            raise ValueError(f"split {split} outside (0, {depth})")
+        specs.append(PlacementSpec(
+            f"fnd_grad_pn{split:02d}",
+            (Region(code=pc, cols=(0, split)), Region(code=nc, cols=(split, depth))),
+            f"PC below column {split}, NC in [{split}, {depth})",
+        ))
+        specs.append(PlacementSpec(
+            f"fnd_grad_np{split:02d}",
+            (Region(code=nc, cols=(0, split)), Region(code=pc, cols=(split, depth))),
+            f"NC below column {split}, PC in [{split}, {depth})",
+        ))
+    return tuple(specs)
+
+
+def default_family(n_min: int = 8) -> tuple[PlacementSpec, ...]:
+    """The default foundry alphabet extension: >= ``n_min`` distinct specs
+    (depth sweeps, checkerboards, gradients), enough to lift the paper's
+    K=9 alphabet to K >= 16. Deterministic order and names."""
+    specs = (
+        column_depth_family(depths=(8, 16), codes=("pc1", "nc1"))
+        + column_depth_family(depths=(24,), codes=("pc2", "nc2"))
+        + stage_checkerboard_family(periods=(3,))
+        + gradient_family(splits=(12,))
+    )
+    if len(specs) < n_min:
+        specs = specs + gradient_family(splits=(6, 18))
+    if len(specs) < n_min:
+        raise ValueError(f"default family has only {len(specs)} specs < {n_min}")
+    return specs

@@ -64,18 +64,32 @@ def _make_kernel(kh: int, kw: int, f_total: int, filter_group: int):
     return _kernel
 
 
+def am_conv2d_bitexact_kernel(x, w, slot_map, *, batch_block=1,
+                              filter_group=FILTER_GROUP, interpret=True):
+    """x (B,H,W,Cin) f32, w (F,kh,kw,Cin) f32, slot_map (F,kh,kw) int32.
+
+    The scheme stack is fetched OUTSIDE the jit boundary and passed as an
+    operand: its (N_VARIANTS, 3, 48) shape keys the jit cache, so growing the
+    variant registry (repro.foundry) retraces instead of serving a stale
+    baked-in stack.
+    """
+    stack = jnp.asarray(schemes.scheme_stack(), jnp.int32)
+    return _am_conv2d_bitexact_jit(x, w, slot_map, stack,
+                                   batch_block=batch_block,
+                                   filter_group=filter_group,
+                                   interpret=interpret)
+
+
 @functools.partial(
     jax.jit, static_argnames=("batch_block", "filter_group", "interpret")
 )
-def am_conv2d_bitexact_kernel(x, w, slot_map, *, batch_block=1,
-                              filter_group=FILTER_GROUP, interpret=True):
-    """x (B,H,W,Cin) f32, w (F,kh,kw,Cin) f32, slot_map (F,kh,kw) int32."""
+def _am_conv2d_bitexact_jit(x, w, slot_map, stack, *, batch_block,
+                            filter_group, interpret):
     b, h, wd, cin = x.shape
     f, kh, kw, _ = w.shape
     ho, wo = h - kh + 1, wd - kw + 1
     assert b % batch_block == 0
 
-    stack = jnp.asarray(schemes.scheme_stack(), jnp.int32)
     return pl.pallas_call(
         _make_kernel(kh, kw, f, filter_group),
         grid=(b // batch_block,),

@@ -53,16 +53,27 @@ def _kernel(x_ref, w_ref, vid_ref, stack_ref, o_ref):
     o_ref[...] += jnp.sum(prods, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def am_matmul_bitexact_kernel(x, w, variant_ids, *, block=DEFAULT_BLOCK, interpret=True):
-    """x (M,K) f32 @ w (K,N) f32 under per-(K,N) variant ids (int32)."""
+    """x (M,K) f32 @ w (K,N) f32 under per-(K,N) variant ids (int32).
+
+    The scheme stack is fetched OUTSIDE the jit boundary and passed as an
+    operand: its (N_VARIANTS, 3, 48) shape keys the jit cache, so growing the
+    variant registry (repro.foundry) retraces instead of serving a stale
+    baked-in stack.
+    """
+    stack = jnp.asarray(schemes.scheme_stack(), jnp.int32)
+    return _am_matmul_bitexact_jit(x, w, variant_ids, stack,
+                                   block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _am_matmul_bitexact_jit(x, w, variant_ids, stack, *, block, interpret):
     m, k = x.shape
     n = w.shape[1]
     bm, bk, bn = block
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (x.shape, w.shape, block)
 
     grid = (m // bm, n // bn, k // bk)
-    stack = jnp.asarray(schemes.scheme_stack(), jnp.int32)
     return pl.pallas_call(
         _kernel,
         grid=grid,

@@ -98,17 +98,28 @@ def conv2d_exact_ref(x, w):
     )
 
 
-def am_conv2d_surrogate_ref(x, w, slot_map, key, noise_scale: float = 1.0):
+def am_conv2d_surrogate_ref(x, w, slot_map, key, noise_scale: float = 1.0,
+                            moment_tables=None):
     """Surrogate interleaved conv2d: per-slot moments folded into the taps.
 
     Matches the statistical model of core/surrogate.py at conv granularity:
     each (f, ky, kx) tap's products get (1 + mu_v) mean scaling and additive
     variance (x^2 conv (w^2 sigma^2)). ``noise_scale`` amplifies both moments
     for the error-magnitude ablation (1.0 = paper-faithful calibration).
-    """
-    from repro.core import surrogate
 
-    mu_t, sg_t = surrogate.moment_tables()
+    ``moment_tables`` is an optional (mu_t, sg_t) pair of per-variant-id
+    tables. Default None fetches the live tables here — which bakes them in
+    as constants when this function is traced under a caller's jit, pinning
+    the alphabet at trace time. Callers that hold a jitted closure across
+    foundry registrations must pass the tables as traced operands instead
+    (their (N_VARIANTS,) shape then keys the jit cache, forcing a retrace
+    when the registry grows — see paper_cnn.make_fast_evaluator).
+    """
+    if moment_tables is None:
+        from repro.core import surrogate
+
+        moment_tables = surrogate.moment_tables()
+    mu_t, sg_t = moment_tables
     mu_t, sg_t = mu_t * noise_scale, sg_t * noise_scale
     slot = jnp.asarray(slot_map)  # may be traced (fast NSGA-II inner loop)
     mu = jnp.asarray(mu_t)[slot][None, :, :, :]  # (1,F,kh,kw) -> align below

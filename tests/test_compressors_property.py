@@ -72,3 +72,80 @@ def test_sign_always_exact(x, y):
         true = x * y
         if true != 0 and got != 0:
             assert np.sign(got) == np.sign(true)
+
+
+# ---------------------------------------------------------------------------
+# Foundry spec invariants
+# ---------------------------------------------------------------------------
+
+from repro import foundry  # noqa: E402
+from repro.core import hwmodel  # noqa: E402
+
+# Strategy: a random foundry placement — code family, depth, stage subset,
+# stride — always a valid spec by construction.
+_codes_pc = st.sampled_from([C.PC1, C.PC2])
+_codes_nc = st.sampled_from([C.NC1, C.NC2])
+_stages = st.sampled_from([(0,), (1,), (2,), (0, 1), (0, 2), (1, 2), (0, 1, 2)])
+_depth = st.integers(1, schemes.APPROX_COLS)
+_step = st.integers(1, 3)
+
+
+def _spec(code, stages, depth, step):
+    return foundry.PlacementSpec(
+        "prop", (foundry.Region(code=code, stages=stages, cols=(0, depth),
+                                step=step),))
+
+
+@given(_stages, _depth, _step, st.integers(0, (1 << 20) - 1),
+       st.integers(0, (1 << 20) - 1))
+@settings(max_examples=24, deadline=None)
+def test_zero_approx_spec_bit_identical_to_exact(stages, depth, step, a, b):
+    """A spec whose regions all carry the EXACT code is the exact multiplier,
+    bit for bit (on full FP32 multiplies, not just the mantissa tree)."""
+    spec = _spec(C.EXACT, stages, depth, step)
+    af = np.float32(1.0 + a * 2.0 ** -20)
+    bf = np.float32(1.0 + b * 2.0 ** -20)
+    got = np.asarray(fp32_mul.fp32_multiply(
+        jnp.float32(af), jnp.float32(bf), jnp.asarray(spec.to_map())))
+    want = np.asarray(fp32_mul.fp32_multiply(jnp.float32(af), jnp.float32(bf)))
+    assert got.view(np.uint32) == want.view(np.uint32)
+
+
+@given(_codes_pc, _stages, _depth, _step,
+       st.integers(0, (1 << 23) - 1), st.integers(0, (1 << 23) - 1))
+@settings(max_examples=24, deadline=None)
+def test_pc_only_spec_error_nonnegative(code, stages, depth, step, a, b):
+    """PC-only placements can only add value to the mantissa product."""
+    spec = _spec(code, stages, depth, step)
+    assert spec.is_pc_only()
+    w = 1 << np.arange(48, dtype=np.int64)
+    got = int((np.asarray(fp32_mul.mantissa_multiply_bits(
+        jnp.int32(a), jnp.int32(b), jnp.asarray(spec.to_map()))) * w).sum())
+    if a * b < (1 << 46):  # below the wrap-around envelope
+        assert got >= a * b
+
+
+@given(_codes_nc, _stages, _depth, _step,
+       st.integers(0, (1 << 23) - 1), st.integers(0, (1 << 23) - 1))
+@settings(max_examples=24, deadline=None)
+def test_nc_only_spec_error_nonpositive(code, stages, depth, step, a, b):
+    """NC-only placements can only drop value from the mantissa product."""
+    spec = _spec(code, stages, depth, step)
+    assert spec.is_nc_only()
+    w = 1 << np.arange(48, dtype=np.int64)
+    got = int((np.asarray(fp32_mul.mantissa_multiply_bits(
+        jnp.int32(a), jnp.int32(b), jnp.asarray(spec.to_map()))) * w).sum())
+    if a * b < (1 << 46):
+        assert got <= a * b
+
+
+def test_hwcost_calibration_reproduces_table1():
+    """The foundry cost model interpolates paper Table I on the seed AMs."""
+    model = foundry.calibrate()
+    assert model.max_table_residual() < 1e-6
+    for v in schemes.AM_SEED_VARIANTS:
+        pred = model.predict(schemes.scheme_map(v))
+        want = hwmodel.TABLE_I[v]
+        for metric in ("area_um2", "power_uw", "delay_ps"):
+            assert abs(getattr(pred, metric) - getattr(want, metric)) <= (
+                1e-6 * getattr(want, metric)), (v, metric)
