@@ -359,6 +359,89 @@ def foundry_bench(
     return out
 
 
+def codesign_bench(
+    n_specs: int = 4,
+    outer_pop: int = 4,
+    outer_generations: int = 1,
+    inner_pop: int = 8,
+    inner_generations: int = 2,
+    n_images: int = 32,
+    char_n: int = 1 << 11,
+) -> dict:
+    """Two-level codesign search throughput (persisted to BENCH_codesign.json).
+
+    Runs a reduced-budget repro.codesign search against the blocked-GEMM
+    population evaluator and reports the three scale metrics of the
+    subsystem: specs characterized per second (the stacked bit-level sweep,
+    misses only), inner interleaving evaluations per second (end-to-end,
+    includes the per-candidate registration + search machinery), and the
+    memo hit rates at both levels (spec-hash characterization memo, outer
+    spec-set fitness memo, alphabet-salted inner sequence memo). All
+    registrations are transient (`temporary_variants` inside the search) —
+    the live registry is untouched.
+    """
+    import jax
+
+    from repro import codesign
+    from repro.experiments import paper_cnn
+    from repro.models import cnn
+
+    try:
+        params = paper_cnn.load_params()
+    except FileNotFoundError:  # throughput does not need trained weights
+        params = cnn.init_params(jax.random.PRNGKey(0))
+    ev = paper_cnn.make_batched_evaluator(params, n_images)
+    key = jax.random.PRNGKey(1000)
+    cfg = codesign.CodesignConfig(
+        n_specs=n_specs, outer_pop=outer_pop,
+        outer_generations=outer_generations, inner_pop=inner_pop,
+        inner_generations=inner_generations, char_n=char_n,
+    )
+    t0 = time.time()
+    res = codesign.codesign_search(
+        lambda g: ev(g, key), genome_len=cnn.N_SLOTS, cfg=cfg
+    )
+    sec = time.time() - t0
+    sm = res["stats"]["spec_memo"]
+    inner = res["stats"]["inner"]
+    outer = res["stats"]["outer"]
+    out = {
+        "n_specs": n_specs,
+        "outer_pop": outer_pop,
+        "outer_generations": outer_generations,
+        "inner_pop": inner_pop,
+        "inner_generations": inner_generations,
+        "n_images": n_images,
+        "char_n": char_n,
+        "seconds": sec,
+        "specs_characterized": sm["misses"],
+        "specs_characterized_per_sec": (
+            sm["misses"] / sm["char_seconds"] if sm["char_seconds"] else 0.0
+        ),
+        "spec_memo_hit_rate": (
+            sm["hits"] / (sm["hits"] + sm["misses"])
+            if sm["hits"] + sm["misses"] else 0.0
+        ),
+        "inner_evals": inner["genomes_requested"],
+        "inner_evals_per_sec": inner["genomes_requested"] / sec if sec else 0.0,
+        "inner_cache_hit_rate": inner["cache_hit_rate"],
+        "outer_candidates": outer["genomes_requested"],
+        "outer_cache_hit_rate": outer["cache_hit_rate"],
+        "archive_points": len(res["archive"]),
+    }
+    print(f"codesign_char_n{char_n},{sm['char_seconds']*1e6:.1f},"
+          f"{out['specs_characterized_per_sec']:.2f}_specs_per_sec,"
+          f"memo_hit_rate={out['spec_memo_hit_rate']:.3f}")
+    print(f"codesign_inner_evals,{sec*1e6:.1f},"
+          f"{out['inner_evals_per_sec']:.1f}_evals_per_sec,"
+          f"cache_hit_rate={out['inner_cache_hit_rate']:.3f}")
+    print(f"codesign_outer_pop{outer_pop}_gen{outer_generations},"
+          f"{out['outer_candidates']},candidates,"
+          f"cache_hit_rate={out['outer_cache_hit_rate']:.3f},"
+          f"archive={out['archive_points']}")
+    return out
+
+
 def main() -> None:
     """Host micro-benchmarks, routed through the AM engine."""
     rng = np.random.default_rng(0)

@@ -7,9 +7,11 @@ artifacts/ so the perf trajectory is trackable across PRs (CI uploads them
 as workflow artifacts): BENCH_nsga2.json (search throughput: genomes/sec,
 wall-clock per generation, memo-cache hit rate, plus the "sharded" section —
 genomes/sec per forced-host-device count and the 2-device speedup),
-BENCH_engine.json (per-backend AM engine matmul/conv timings) and
+BENCH_engine.json (per-backend AM engine matmul/conv timings),
 BENCH_foundry.json (variant-foundry synthesis/characterization throughput
-plus seed-vs-expanded alphabet evaluator rows).
+plus seed-vs-expanded alphabet evaluator rows) and BENCH_codesign.json
+(two-level placement+interleaving search: specs characterized/sec,
+inner-evals/sec, memo hit rates at every level).
 """
 from __future__ import annotations
 
@@ -23,6 +25,7 @@ ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
 BENCH_NSGA2 = ARTIFACTS / "BENCH_nsga2.json"
 BENCH_ENGINE = ARTIFACTS / "BENCH_engine.json"
 BENCH_FOUNDRY = ARTIFACTS / "BENCH_foundry.json"
+BENCH_CODESIGN = ARTIFACTS / "BENCH_codesign.json"
 
 
 def _section(title: str, fn):
@@ -55,6 +58,14 @@ def main() -> None:
         ARTIFACTS.mkdir(exist_ok=True)
         BENCH_FOUNDRY.write_text(json.dumps(foundry_metrics, indent=1))
         print(f"wrote {BENCH_FOUNDRY}")
+    codesign_metrics = _section(
+        "Codesign — two-level placement+interleaving search throughput",
+        kernel_bench.codesign_bench,
+    )
+    if codesign_metrics is not None:
+        ARTIFACTS.mkdir(exist_ok=True)
+        BENCH_CODESIGN.write_text(json.dumps(codesign_metrics, indent=1))
+        print(f"wrote {BENCH_CODESIGN}")
     nsga2_metrics = _section(
         "NSGA-II search throughput — batched vs per-individual evaluation",
         kernel_bench.nsga2_bench,

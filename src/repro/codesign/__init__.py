@@ -1,0 +1,67 @@
+"""Co-design search: NSGA-II over the multiplier placement space itself.
+
+Where the foundry (repro.foundry) makes the alphabet *dynamic*, codesign
+makes it *searched*: a two-level NSGA-II jointly evolves which approximate
+multipliers exist (outer placement genomes over the (3, 48) compressor
+grid) and how they are interleaved (inner sequence searches over each
+candidate alphabet), scoring candidates end-to-end through the CNN — the
+hardware-driven co-optimization direction of Lu et al. evaluated the way
+Kim et al. argue it must be.
+
+  genome   fixed-length spec-set codec: encode/decode/repair + closed
+           crossover/mutation over the valid-genome set
+  evolve   the two-level loop: transient foundry provisioning, spec-hash
+           memoized characterization (batched per generation), shared
+           alphabet-salted inner memo caches, hypervolume outer scoring
+  archive  cross-generation elite archive with dominance pruning and JSON
+           persistence
+
+`experiments/paper_cnn.py::codesign_study` wires this to the blocked-GEMM
+population evaluator and commits `artifacts/codesign_study.json`.
+"""
+from repro.codesign import genome
+from repro.codesign.archive import ArchivePoint, EliteArchive
+from repro.codesign.evolve import (
+    CodesignConfig,
+    SpecMemo,
+    codesign_search,
+    make_inner_objectives,
+    novel_specs,
+    reference_point,
+)
+from repro.codesign.genome import (
+    SpecParams,
+    crossover,
+    decode,
+    decode_specs,
+    encode,
+    is_valid,
+    mutate,
+    paper_family_params,
+    random_genome,
+    repair,
+    spec_set_key,
+)
+
+__all__ = [
+    "ArchivePoint",
+    "CodesignConfig",
+    "EliteArchive",
+    "SpecMemo",
+    "SpecParams",
+    "codesign_search",
+    "crossover",
+    "decode",
+    "decode_specs",
+    "encode",
+    "genome",
+    "is_valid",
+    "make_inner_objectives",
+    "mutate",
+    "novel_specs",
+    "paper_family_params",
+    "random_genome",
+    "reference_point",
+    "repair",
+    "spec_set_key",
+]

@@ -1,0 +1,133 @@
+"""Cross-generation elite archive of co-design points.
+
+The codesign search explores many alphabets; any (alphabet, sequence) pair
+it ever scores is a deployable design, so the archive accumulates them
+*across* outer generations and inner searches with dominance pruning: a
+point enters only if no kept point weakly dominates it, and evicts every
+kept point it dominates. The surviving set is therefore always a Pareto
+front over everything ever inserted — the study's committed deliverable
+(`artifacts/codesign_study.json`).
+
+Points reference their alphabet by key (the canonical spec-set hash, hex)
+into a side table of alphabet descriptions — spec names, gene parameters,
+variant ids, hardware specs — so archived sequences stay interpretable
+after the transient registrations that produced them are rolled back.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchivePoint:
+    """One deployable co-design: objectives + sequence + alphabet."""
+
+    objectives: tuple[float, ...]  # (area_um2, pdp_pj, acc_loss), minimized
+    genome: tuple[int, ...]  # variant-id sequence under `alphabet_key`
+    alphabet_key: str  # hex spec-set key into EliteArchive.alphabets
+    source: str = "search"  # provenance tag ("search", "baseline", ...)
+
+    def as_dict(self) -> dict:
+        return {
+            "objectives": list(self.objectives),
+            "genome": list(self.genome),
+            "alphabet_key": self.alphabet_key,
+            "source": self.source,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ArchivePoint":
+        return cls(
+            objectives=tuple(float(x) for x in d["objectives"]),
+            genome=tuple(int(x) for x in d["genome"]),
+            alphabet_key=str(d["alphabet_key"]),
+            source=str(d.get("source", "search")),
+        )
+
+
+def _dominates(a, b) -> bool:
+    """a weakly dominates b with at least one strict improvement."""
+    a, b = np.asarray(a, float), np.asarray(b, float)
+    return bool((a <= b).all() and (a < b).any())
+
+
+class EliteArchive:
+    """Dominance-pruned point store with JSON persistence."""
+
+    def __init__(self):
+        self.points: list[ArchivePoint] = []
+        self.alphabets: dict[str, dict] = {}
+        self.inserted = 0  # insert() attempts (telemetry)
+        self.rejected = 0  # dominated-or-duplicate rejections
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def add_alphabet(self, key: str, info: dict) -> None:
+        """Describe an alphabet (idempotent; first description wins)."""
+        self.alphabets.setdefault(key, info)
+
+    def insert(self, point: ArchivePoint) -> bool:
+        """Insert with dominance pruning; True iff the point was kept.
+
+        Rejected when any kept point weakly dominates it or duplicates its
+        objectives exactly (first-in wins on ties, keeping the front thin);
+        on acceptance, kept points it dominates are evicted — coverage is
+        preserved transitively, so pruning never weakens the front's
+        dominance over any previously covered baseline.
+        """
+        self.inserted += 1
+        objs = np.asarray(point.objectives, float)
+        for p in self.points:
+            po = np.asarray(p.objectives, float)
+            if _dominates(po, objs) or np.array_equal(po, objs):
+                self.rejected += 1
+                return False
+        self.points = [
+            p for p in self.points if not _dominates(objs, p.objectives)
+        ]
+        self.points.append(point)
+        return True
+
+    def insert_front(self, points) -> int:
+        """Insert a batch; returns how many were kept."""
+        return sum(self.insert(p) for p in points)
+
+    def front_objectives(self) -> np.ndarray:
+        if not self.points:
+            return np.zeros((0, 0))
+        return np.asarray([p.objectives for p in self.points], float)
+
+    def as_dict(self) -> dict:
+        # Stable report order: lexicographic by objectives.
+        pts = sorted(self.points, key=lambda p: p.objectives)
+        used = {p.alphabet_key for p in pts}
+        return {
+            "points": [p.as_dict() for p in pts],
+            "alphabets": {
+                k: v for k, v in self.alphabets.items() if k in used
+            },
+            "inserted": self.inserted,
+            "rejected": self.rejected,
+        }
+
+    def save(self, path) -> None:
+        pathlib.Path(path).write_text(json.dumps(self.as_dict(), indent=1))
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EliteArchive":
+        a = cls()
+        a.alphabets = dict(d.get("alphabets", {}))
+        for pd in d.get("points", []):
+            a.insert(ArchivePoint.from_dict(pd))
+        a.inserted = int(d.get("inserted", a.inserted))
+        a.rejected = int(d.get("rejected", a.rejected))
+        return a
+
+    @classmethod
+    def load(cls, path) -> "EliteArchive":
+        return cls.from_dict(json.loads(pathlib.Path(path).read_text()))

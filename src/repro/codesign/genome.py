@@ -1,0 +1,299 @@
+"""Placement-genome codec: fixed-length integer genomes <-> spec sets.
+
+The codesign outer search evolves *which multipliers exist*: an outer genome
+is a fixed-length int32 vector of ``n_specs`` consecutive 6-gene blocks,
+each decoding to one `foundry.spec.PlacementSpec` over the (3 stages x 48
+columns) compressor grid. The gene alphabet parameterizes the foundry's
+family generators (the paper's NI pattern with swept depth, generalized
+stage+column checkerboards, mixed PC/NC gradients) over all four
+approximate-compressor codes (PC1/PC2/NC1/NC2) and arbitrary stage subsets:
+
+  gene  meaning
+  ----  -----------------------------------------------------------------
+  FAM   family: 0 depth (uniform code), 1 checkerboard, 2 gradient
+  CODE_A  primary compressor code index into CODE_CHOICES
+  CODE_B  secondary code (checkerboard trail / gradient upper band)
+  DEPTH levels of DEPTH_UNIT columns: approximate depth = 4*DEPTH in [4,24]
+  AUX   checkerboard column period (1..4) / gradient split (4*AUX columns)
+  STAGE non-empty bitmask over the 3 reduction stages
+
+Canonical form: genes a family does not read are zeroed (`repair`), so one
+spec has exactly one genome block and ``decode(encode(params)) == params``
+round-trips (the hypothesis invariant in tests/test_codesign_property.py).
+`repair` maps *any* int vector into the valid set via per-gene modular
+wrapping, and `crossover`/`mutate` re-repair their output — closure over the
+valid-genome set, so the outer NSGA-II can never construct an invalid
+placement. Spec identity for memoization is the rendered (3, 48) map
+(`spec_set_key`), not the genes: distinct parameter blocks that paint the
+same map (e.g. a single-code checkerboard) share characterization, moments
+and hardware cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core import compressors as C
+from repro.core import schemes
+from repro.foundry.spec import PlacementSpec, Region
+
+N_GENES = 6
+G_FAM, G_CODE_A, G_CODE_B, G_DEPTH, G_AUX, G_STAGE = range(N_GENES)
+
+FAM_DEPTH, FAM_CKB, FAM_GRAD = 0, 1, 2
+N_FAMILIES = 3
+
+CODE_CHOICES = (C.PC1, C.PC2, C.NC1, C.NC2)
+CODE_INDEX = {c: i for i, c in enumerate(CODE_CHOICES)}
+_CODE_TAGS = tuple(C.CODE_NAMES[c].lower() for c in CODE_CHOICES)
+
+DEPTH_UNIT = 4
+MAX_DEPTH_STEPS = schemes.APPROX_COLS // DEPTH_UNIT  # 6 -> depths 4..24
+MAX_PERIOD = 4
+N_STAGE_MASKS = (1 << schemes.N_STAGES) - 1  # masks 1..7
+
+# Per-gene spans for uniform random draws (repair folds them into range).
+GENE_SPAN = np.array(
+    [N_FAMILIES, len(CODE_CHOICES), len(CODE_CHOICES),
+     MAX_DEPTH_STEPS + 1, MAX_DEPTH_STEPS + 1, N_STAGE_MASKS + 1],
+    np.int64,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecParams:
+    """One decoded genome block (canonical gene values)."""
+
+    family: int
+    code_a: int
+    code_b: int
+    depth: int  # DEPTH_UNIT-column steps, 1..MAX_DEPTH_STEPS
+    aux: int
+    stages: int  # bitmask, 1..7
+
+    @property
+    def depth_cols(self) -> int:
+        return self.depth * DEPTH_UNIT
+
+    @property
+    def stage_tuple(self) -> tuple[int, ...]:
+        return tuple(s for s in range(schemes.N_STAGES) if self.stages >> s & 1)
+
+    @property
+    def name(self) -> str:
+        """Deterministic spec name — a pure function of the gene block."""
+        a, b = _CODE_TAGS[self.code_a], _CODE_TAGS[self.code_b]
+        if self.family == FAM_DEPTH:
+            body = f"d_{a}_c{self.depth_cols:02d}"
+        elif self.family == FAM_CKB:
+            body = f"k_{a}_{b}_c{self.depth_cols:02d}_p{self.aux}"
+        else:
+            body = f"g_{a}_{b}_c{self.depth_cols:02d}_s{self.aux * DEPTH_UNIT:02d}"
+        return f"cg_{body}_m{self.stages}"
+
+    def to_spec(self) -> PlacementSpec:
+        """Render the placement spec (regions over the exact base map)."""
+        ca = CODE_CHOICES[self.code_a]
+        cb = CODE_CHOICES[self.code_b]
+        stages = self.stage_tuple
+        d = self.depth_cols
+        if self.family == FAM_DEPTH:
+            regions = (Region(code=ca, stages=stages, cols=(0, d)),)
+            desc = f"uniform {_CODE_TAGS[self.code_a]} in columns [0, {d})"
+        elif self.family == FAM_CKB:
+            # Same lattice as foundry.stage_checkerboard_family: the code
+            # alternates with column-block period `aux` and stage phase.
+            p = self.aux
+            regions = tuple(
+                Region(
+                    code=ca if (s + c0 // p) % 2 == 0 else cb,
+                    stages=(s,), cols=(c0, min(c0 + p, d)),
+                )
+                for s in stages
+                for c0 in range(0, d, p)
+            )
+            desc = (f"stage+column checkerboard, period {p}, "
+                    f"{_CODE_TAGS[self.code_a]} leading")
+        else:
+            split = self.aux * DEPTH_UNIT
+            regions = (
+                Region(code=ca, stages=stages, cols=(0, split)),
+                Region(code=cb, stages=stages, cols=(split, d)),
+            )
+            desc = (f"{_CODE_TAGS[self.code_a]} below column {split}, "
+                    f"{_CODE_TAGS[self.code_b]} in [{split}, {d})")
+        return PlacementSpec(self.name, regions, desc)
+
+    def genes(self) -> tuple[int, ...]:
+        return (self.family, self.code_a, self.code_b,
+                self.depth, self.aux, self.stages)
+
+
+def n_specs_of(genome: np.ndarray) -> int:
+    g = np.asarray(genome)
+    if g.ndim != 1 or g.size == 0 or g.size % N_GENES:
+        raise ValueError(
+            f"genome length {g.size} is not a positive multiple of {N_GENES}"
+        )
+    return g.size // N_GENES
+
+
+def repair(genome: np.ndarray) -> np.ndarray:
+    """Fold any int vector into the canonical valid-genome set.
+
+    Per-gene modular wrapping (so mutation/crossover offspring stay inside
+    the (3, 48)-grid grammar no matter what), family-conditional constraints
+    (gradient needs depth >= 2 blocks and a split strictly inside it), and
+    canonical zeroing of genes the family does not read. Idempotent.
+    """
+    n = n_specs_of(genome)
+    g = np.asarray(genome, np.int64).reshape(n, N_GENES).copy()
+    g[:, G_FAM] %= N_FAMILIES
+    g[:, G_CODE_A] %= len(CODE_CHOICES)
+    g[:, G_CODE_B] %= len(CODE_CHOICES)
+    g[:, G_DEPTH] = (g[:, G_DEPTH] - 1) % MAX_DEPTH_STEPS + 1
+    g[:, G_STAGE] = (g[:, G_STAGE] - 1) % N_STAGE_MASKS + 1
+    for i in range(n):
+        fam = g[i, G_FAM]
+        if fam == FAM_DEPTH:
+            g[i, G_CODE_B] = 0
+            g[i, G_AUX] = 0
+        elif fam == FAM_CKB:
+            g[i, G_AUX] = (g[i, G_AUX] - 1) % MAX_PERIOD + 1
+        else:  # FAM_GRAD: split strictly inside the approximate band
+            if g[i, G_DEPTH] < 2:
+                g[i, G_DEPTH] = 2
+            g[i, G_AUX] = (g[i, G_AUX] - 1) % (g[i, G_DEPTH] - 1) + 1
+    return g.reshape(-1).astype(np.int32)
+
+
+def is_valid(genome: np.ndarray) -> bool:
+    """True iff the genome is already in canonical valid form."""
+    g = np.asarray(genome, np.int64).reshape(-1)
+    try:
+        return bool(np.array_equal(repair(g), g.astype(np.int32)))
+    except ValueError:
+        return False
+
+
+def decode(genome: np.ndarray) -> tuple[SpecParams, ...]:
+    """Genome -> per-block SpecParams. The genome must be valid (`repair`)."""
+    g = np.asarray(genome, np.int64)
+    if not is_valid(g):
+        raise ValueError("genome is not in canonical valid form; repair() it")
+    blocks = g.reshape(-1, N_GENES)
+    return tuple(SpecParams(*(int(x) for x in row)) for row in blocks)
+
+
+def encode(params) -> np.ndarray:
+    """SpecParams sequence -> canonical genome (inverse of `decode`)."""
+    g = np.asarray(
+        [x for p in params for x in p.genes()], np.int32
+    )
+    if not is_valid(g):
+        raise ValueError("params do not form a canonical valid genome")
+    return g
+
+
+def decode_specs(genome: np.ndarray) -> tuple[PlacementSpec, ...]:
+    """Genome -> rendered placement specs (repairs first)."""
+    return tuple(p.to_spec() for p in decode(repair(genome)))
+
+
+def spec_set_key(genome: np.ndarray) -> bytes:
+    """Canonical spec-*set* hash: the outer memo identity of a genome.
+
+    Candidate fitness is a function of the induced alphabet only, which the
+    codesign loop derives from the *sorted unique novel maps* (seed-map
+    duplicates resolve to their seed id) — so the key hashes exactly that:
+    block order, gene spelling and map duplicates never split cache entries.
+    """
+    novel = sorted({
+        s.to_map().tobytes() for s in decode_specs(genome)
+    } - seed_map_bytes())
+    h = hashlib.sha1()
+    for mb in novel:
+        h.update(mb)
+    return h.digest()
+
+
+def seed_map_bytes() -> frozenset[bytes]:
+    """Rendered-map identities of the seed alphabet — the single definition
+    of "seed-identical" shared by `spec_set_key` and `evolve.novel_specs`
+    (both must agree on which specs are novel, or the memo identity would
+    desynchronize from the registered alphabet)."""
+    return frozenset(
+        schemes.scheme_map(v).tobytes() for v in schemes.SEED_VARIANTS
+    )
+
+
+def random_genome(n_specs: int, rng: np.random.Generator) -> np.ndarray:
+    """Uniform valid genome of ``n_specs`` blocks."""
+    if n_specs <= 0:
+        raise ValueError(f"n_specs must be positive, got {n_specs}")
+    raw = rng.integers(0, np.tile(GENE_SPAN, n_specs))
+    return repair(raw)
+
+
+def crossover(g1: np.ndarray, g2: np.ndarray, rng: np.random.Generator):
+    """Spec-block-aligned uniform crossover (+ repair): whole 6-gene blocks
+    swap between parents, so offspring inherit intact placements and the
+    operator is closed over the valid set."""
+    n = n_specs_of(g1)
+    mask = np.repeat(rng.random(n) < 0.5, N_GENES)
+    c1 = np.where(mask, g1, g2)
+    c2 = np.where(mask, g2, g1)
+    return repair(c1), repair(c2)
+
+
+def mutate(
+    genome: np.ndarray, rng: np.random.Generator, rate: float | None = None
+) -> np.ndarray:
+    """Per-gene resampling mutation (+ repair).
+
+    Each gene independently redraws uniformly from its span with
+    probability ``rate`` (default 2/len, matching the sequence search's
+    expected two flips per offspring); repair restores family-conditional
+    canonical form, so mutation is closed over the valid set.
+    """
+    g = np.asarray(genome, np.int64).copy()
+    if rate is None:
+        rate = 2.0 / g.size
+    span = np.tile(GENE_SPAN, n_specs_of(g))
+    mask = rng.random(g.size) < rate
+    g[mask] = rng.integers(0, span)[mask]
+    return repair(g)
+
+
+def paper_family_params(n_specs: int) -> tuple[SpecParams, ...]:
+    """Gene blocks whose decoded maps equal `foundry.default_family()` maps.
+
+    The PR-4 foundry study registered ``default_family()[:k_target - 9]``;
+    encoding the same spec set makes that alphabet one point of the codesign
+    outer space, so the foundry front can warm-start (and be provably
+    covered by) the co-design search. Supports the generator's deterministic
+    first ten specs.
+    """
+    pc1, pc2 = CODE_INDEX[C.PC1], CODE_INDEX[C.PC2]
+    nc1, nc2 = CODE_INDEX[C.NC1], CODE_INDEX[C.NC2]
+    full = N_STAGE_MASKS
+    table = (
+        SpecParams(FAM_DEPTH, pc1, 0, 2, 0, full),   # fnd_pc1_d08
+        SpecParams(FAM_DEPTH, pc1, 0, 4, 0, full),   # fnd_pc1_d16
+        SpecParams(FAM_DEPTH, nc1, 0, 2, 0, full),   # fnd_nc1_d08
+        SpecParams(FAM_DEPTH, nc1, 0, 4, 0, full),   # fnd_nc1_d16
+        SpecParams(FAM_DEPTH, pc2, 0, 6, 0, full),   # fnd_pc2_d24
+        SpecParams(FAM_DEPTH, nc2, 0, 6, 0, full),   # fnd_nc2_d24
+        SpecParams(FAM_CKB, pc1, nc1, 6, 3, full),   # fnd_pm_ckb3
+        SpecParams(FAM_CKB, nc1, pc1, 6, 3, full),   # fnd_nm_ckb3
+        SpecParams(FAM_GRAD, pc1, nc1, 6, 3, full),  # fnd_grad_pn12
+        SpecParams(FAM_GRAD, nc1, pc1, 6, 3, full),  # fnd_grad_np12
+    )
+    if not 0 < n_specs <= len(table):
+        raise ValueError(
+            f"paper_family_params supports 1..{len(table)} specs, "
+            f"got {n_specs}"
+        )
+    return table[:n_specs]

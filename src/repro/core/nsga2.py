@@ -58,6 +58,25 @@ class EvalStats:
         }
 
 
+def _alphabet_salt() -> bytes:
+    """Default memo-key salt: the live variant-registry content signature.
+
+    Variant-id genomes only mean something relative to an alphabet; salting
+    every memo key with the registry signature makes the cache
+    alphabet-version-aware, so a cache shared across searches (the codesign
+    subsystem shares one dict across per-candidate inner searches) can never
+    alias hits between different spec sets. Identical registry states share
+    one salt, so legitimate reuse still hits. Falls back to no salt for
+    genomes that are not variant ids (pure-numpy consumers without the
+    schemes registry importable).
+    """
+    try:
+        from repro.core import schemes
+    except Exception:  # pragma: no cover - schemes is a sibling module
+        return b""
+    return schemes.registry_signature()
+
+
 class BatchEvaluator:
     """Memoizing, batching front-end over a population objective.
 
@@ -70,6 +89,14 @@ class BatchEvaluator:
     ``memoize=False`` disables caching entirely: every genome is scored on
     every call (e.g. for objectives meant to get independent stochastic
     draws) and nothing is retained.
+
+    Every memo key is prefixed with ``salt`` — default: the variant
+    registry's content signature (see `_alphabet_salt`), making keys
+    alphabet-version-aware. ``key_fn`` overrides the genome->bytes part of
+    the key entirely (it sees the raw genome and supersedes
+    ``position_agnostic``); the codesign outer search keys placement genomes
+    by canonical spec-set hash this way. ``cache`` shares one memo dict
+    across evaluators — only sound because of the salt.
 
     ``mesh`` (a device mesh with a ``pop_axis_name`` axis) pads every batch
     sent to the evaluator to a multiple of the mesh axis size (copies of
@@ -89,19 +116,27 @@ class BatchEvaluator:
         position_agnostic: bool = False,
         mesh=None,
         pop_axis_name: str = "pop",
+        key_fn: Callable[[np.ndarray], bytes] | None = None,
+        salt: bytes | None = None,
+        cache: dict | None = None,
     ):
         self._fn = objectives_batch
         self._memoize = memoize
         self._position_agnostic = position_agnostic
+        self._key_fn = key_fn
+        self._salt = _alphabet_salt() if salt is None else salt
         self._pad_multiple = (
             1 if mesh is None else int(dict(mesh.shape)[pop_axis_name])
         )
-        self._cache: dict[bytes, np.ndarray] = {}
+        self._cache: dict[bytes, np.ndarray] = cache if cache is not None else {}
         self.stats = EvalStats()
 
     def _key(self, genome: np.ndarray) -> bytes:
+        if self._key_fn is not None:
+            return self._salt + self._key_fn(genome)
         g = np.ascontiguousarray(genome, np.int32)
-        return np.sort(g).tobytes() if self._position_agnostic else g.tobytes()
+        body = np.sort(g).tobytes() if self._position_agnostic else g.tobytes()
+        return self._salt + body
 
     def _score(self, batch: np.ndarray) -> np.ndarray:
         p = batch.shape[0]
@@ -240,6 +275,13 @@ def optimize(
     pop_axis_name: str = "pop",
     initial_genomes: Sequence[np.ndarray] | None = None,
     stats: EvalStats | None = None,
+    init_genome_fn: Callable[[np.random.Generator], np.ndarray] | None = None,
+    crossover_fn: Callable | None = None,
+    mutate_fn: Callable | None = None,
+    key_fn: Callable[[np.ndarray], bytes] | None = None,
+    memo_cache: dict | None = None,
+    memo_salt: bytes | None = None,
+    on_generation: Callable[[int, list[Individual]], None] | None = None,
     log: Callable[[str], None] | None = None,
 ) -> list[Individual]:
     """Run NSGA-II; returns the final population's first Pareto front.
@@ -278,19 +320,42 @@ def optimize(
         bit-identical to earlier releases.
       stats: optional ``EvalStats`` instance populated with batch-call /
         cache-hit telemetry.
+      init_genome_fn: optional rng -> genome sampler replacing the default
+        alphabet-uniform initialization (and its uniform-variant seeding) —
+        for genomes that are not variant-id sequences, e.g. the codesign
+        placement genomes. With it (plus ``crossover_fn``/``mutate_fn``)
+        ``alphabet`` may be empty.
+      crossover_fn: optional (g1, g2, rng) -> (c1, c2) replacing uniform
+        crossover — structured genomes supply operators that respect their
+        encoding (codesign swaps whole spec blocks).
+      mutate_fn: optional (genome, rng) -> genome replacing alphabet-uniform
+        resampling mutation.
+      key_fn: optional genome -> bytes memo key (see BatchEvaluator);
+        supersedes ``position_agnostic`` for cache purposes.
+      memo_cache: optional shared memo dict (see BatchEvaluator.cache) —
+        reuse evaluations across optimize calls; keys are salted with the
+        alphabet signature so cross-alphabet sharing can never alias.
+      memo_salt: optional explicit salt overriding the alphabet signature.
+      on_generation: optional callback(generation, population) invoked after
+        the initial ranking (generation 0) and after each survivor
+        selection (1..generations) — the codesign archive hook.
     """
     if (objective_fn is None) == (objectives_batch is None):
         raise ValueError("provide exactly one of objective_fn / objectives_batch")
     if genome_len <= 0:
         raise ValueError(f"genome_len must be positive, got {genome_len}")
-    if not len(alphabet):
-        raise ValueError("alphabet must be non-empty")
+    custom_ops = init_genome_fn is not None and mutate_fn is not None
+    if not len(alphabet) and not custom_ops:
+        raise ValueError(
+            "alphabet must be non-empty (or provide init_genome_fn + mutate_fn)"
+        )
     if objectives_batch is None:
         objectives_batch = per_individual_batch(objective_fn)
 
     evaluator = BatchEvaluator(
         objectives_batch, memoize=memoize, position_agnostic=position_agnostic,
         mesh=mesh, pop_axis_name=pop_axis_name,
+        key_fn=key_fn, salt=memo_salt, cache=memo_cache,
     )
     if stats is not None:
         evaluator.stats = stats
@@ -298,13 +363,26 @@ def optimize(
     rng = np.random.default_rng(seed)
     alpha = np.asarray(list(alphabet), np.int32)
     rate = mutation_rate if mutation_rate is not None else 2.0 / genome_len
+    cross = crossover_fn if crossover_fn is not None else _crossover
+    mutate = (
+        mutate_fn if mutate_fn is not None
+        else lambda g, r: _mutate(g, alpha, rate, r)
+    )
 
-    genomes = [
-        alpha[rng.integers(0, alpha.size, genome_len)] for _ in range(pop_size)
-    ]
-    # Seed uniform-variant genomes so single-AM deployments are reachable.
-    for i, v in enumerate(alpha[: max(1, pop_size // 8)]):
-        genomes[i] = np.full(genome_len, v, np.int32)
+    if init_genome_fn is not None:
+        genomes = [
+            np.asarray(init_genome_fn(rng), np.int32) for _ in range(pop_size)
+        ]
+        n_uniform = 0
+    else:
+        genomes = [
+            alpha[rng.integers(0, alpha.size, genome_len)]
+            for _ in range(pop_size)
+        ]
+        # Seed uniform-variant genomes so single-AM deployments are reachable.
+        for i, v in enumerate(alpha[: max(1, pop_size // 8)]):
+            genomes[i] = np.full(genome_len, v, np.int32)
+        n_uniform = min(max(1, pop_size // 8), len(alpha))
     if initial_genomes is not None:
         warm = [np.asarray(g, np.int32) for g in initial_genomes]
         for g in warm:
@@ -315,21 +393,22 @@ def optimize(
         # Fill from the tail, stopping short of the uniform seeds above so
         # single-variant deployments of every alphabet entry stay reachable;
         # surplus warm genomes beyond the remaining slots are dropped.
-        n_uniform = min(max(1, pop_size // 8), len(alpha))
         for i, g in enumerate(warm[: pop_size - n_uniform]):
             genomes[pop_size - 1 - i] = g
     objs = evaluator(genomes)
     pop = [Individual(genome=g, objectives=o) for g, o in zip(genomes, objs)]
     _rank_population(pop)
+    if on_generation:
+        on_generation(0, pop)
 
     for gen in range(generations):
         child_genomes: list[np.ndarray] = []
         while len(child_genomes) < pop_size:
             p1, p2 = _tournament(pop, rng), _tournament(pop, rng)
-            c1, c2 = _crossover(p1.genome, p2.genome, rng)
-            child_genomes.append(_mutate(c1, alpha, rate, rng))
+            c1, c2 = cross(p1.genome, p2.genome, rng)
+            child_genomes.append(mutate(c1, rng))
             if len(child_genomes) < pop_size:
-                child_genomes.append(_mutate(c2, alpha, rate, rng))
+                child_genomes.append(mutate(c2, rng))
         # One batched evaluation per generation: offspring only — survivors
         # carry their objectives, duplicates resolve from the memo cache.
         child_objs = evaluator(child_genomes)
@@ -342,6 +421,8 @@ def optimize(
         union.sort(key=lambda ind: (ind.rank, -ind.crowding))
         pop = union[:pop_size]
         _rank_population(pop)
+        if on_generation:
+            on_generation(gen + 1, pop)
         if log:
             f0 = [ind for ind in pop if ind.rank == 0]
             best = min(ind.objectives[-1] for ind in f0)
@@ -368,6 +449,48 @@ def front_weakly_dominates(front_objs, baseline_objs) -> bool:
     if a.size == 0:
         return b.size == 0
     return bool(np.all((a[:, None, :] <= b[None, :, :]).all(-1).any(0)))
+
+
+def _hv_recursive(pts: np.ndarray, ref: np.ndarray) -> float:
+    """Exact hypervolume by dimension-sweep slicing (pts non-dominated)."""
+    if pts.shape[0] == 0:
+        return 0.0
+    if pts.shape[1] == 1:
+        return float(ref[0] - pts[:, 0].min())
+    pts = pts[np.argsort(pts[:, -1], kind="stable")]
+    zs = pts[:, -1]
+    hv = 0.0
+    for i in range(pts.shape[0]):
+        z_hi = zs[i + 1] if i + 1 < pts.shape[0] else ref[-1]
+        if z_hi > zs[i]:
+            sub = pts[: i + 1, :-1]
+            if sub.shape[0] > 1:
+                sub = sub[pareto_filter(sub)]
+            hv += (z_hi - zs[i]) * _hv_recursive(sub, ref[:-1])
+    return float(hv)
+
+
+def hypervolume(objs, ref) -> float:
+    """Exact hypervolume dominated by a point set w.r.t. ``ref`` (minimized).
+
+    The volume of the region weakly dominated by at least one point and
+    bounded above by the reference point. Points are clipped into the
+    reference box first, so points at or beyond ``ref`` in any coordinate
+    contribute only their in-box part (possibly nothing). The codesign outer
+    search maximizes this over each candidate alphabet's inner Pareto front,
+    with the reference derived from the paper's Table-I cost envelope.
+
+    Exact sweep algorithm (sort by the last objective, integrate
+    (d-1)-dimensional slabs recursively); O(n^2) per dimension — fronts here
+    are tens of points.
+    """
+    pts = np.atleast_2d(np.asarray(objs, float))
+    ref = np.asarray(ref, float).reshape(-1)
+    if pts.shape[1] != ref.size:
+        raise ValueError(f"objective dim {pts.shape[1]} != ref dim {ref.size}")
+    pts = np.minimum(pts, ref[None, :])
+    pts = pts[pareto_filter(pts)]
+    return _hv_recursive(pts, ref)
 
 
 def knee_point(front: list[Individual]) -> Individual:

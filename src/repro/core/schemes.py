@@ -28,6 +28,8 @@ from-import them.
 """
 from __future__ import annotations
 
+import hashlib
+
 import numpy as np
 
 from repro.core import compressors as C
@@ -118,6 +120,32 @@ def registry_version() -> int:
 def variant_names() -> tuple[str, ...]:
     """All registered variant names in id order (seed first, then foundry)."""
     return tuple(_MAPS)
+
+
+_SIGNATURE_CACHE: tuple[int, bytes] | None = None
+
+
+def registry_signature() -> bytes:
+    """Content hash of the live alphabet (names + maps, id order).
+
+    Unlike `registry_version` — a monotone mutation counter that also bumps
+    on `restore` — the signature is a pure function of the registry
+    *content*: two states with identical (name, map) sequences share one
+    signature. It is the alphabet-identity salt for memo caches that outlive
+    a single registry state (core/nsga2.py BatchEvaluator): variant-id
+    genomes mean different multipliers under different alphabets, so keys
+    carrying the signature can never alias across spec sets, while identical
+    re-registrations (e.g. the same spec set provisioned twice under
+    `temporary_variants`) still share cache hits.
+    """
+    global _SIGNATURE_CACHE
+    if _SIGNATURE_CACHE is None or _SIGNATURE_CACHE[0] != _VERSION:
+        h = hashlib.sha1()
+        for name, m in _MAPS.items():
+            h.update(name.encode())
+            h.update(m.tobytes())
+        _SIGNATURE_CACHE = (_VERSION, h.digest())
+    return _SIGNATURE_CACHE[1]
 
 
 def validate_scheme_map(m) -> np.ndarray:

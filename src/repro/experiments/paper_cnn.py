@@ -586,6 +586,195 @@ def foundry_study(
     return results
 
 
+def codesign_study(
+    params=None,
+    *,
+    n_specs: int = 7,
+    outer_pop: int = 8,
+    outer_generations: int = 3,
+    inner_pop: int = 16,
+    inner_generations: int = 6,
+    n_images: int = 512,
+    seed: int = 0,
+    noise_scale: float = 1.0,
+    char_n: int = 1 << 15,
+    char_seed: int = 0,
+    mesh=None,
+    baseline_name: str | None = "foundry_study.json",
+    out_name: str | None = "codesign_study.json",
+    log=print,
+):
+    """Two-level co-design: search the placement space AND the interleaving.
+
+    Runs repro.codesign.codesign_search over ``n_specs``-placement outer
+    genomes, scoring every candidate alphabet by an inner interleaving
+    search through the blocked-GEMM population evaluator (optionally
+    ``mesh``-sharded, so inner evaluations stay population-batched).
+
+    The PR-4 foundry alphabet (`foundry.default_family()[:n_specs]`) is
+    injected as one outer seed candidate (codesign.paper_family_params
+    encodes the identical maps), and — when ``baseline_name`` exists and
+    its alphabet matches — the committed foundry front warm-starts that
+    candidate's inner search with its genomes remapped onto codesign's
+    canonical id order. The defaults reproduce the committed foundry run's
+    evaluator exactly (n_images=512, noise 1.0, eval key PRNGKey(seed+1000),
+    char_n=2^15, char_seed=0), so those warm points re-score to the
+    committed objective values and the elite archive covers the baseline
+    front by construction; the *falsifiable* claim reported separately is
+    ``search_front_weakly_dominates_baseline`` — dominance by the codesign
+    search's own discoveries (source != "baseline" imports), which elitism
+    or positional aliasing could in principle break.
+
+    Results land in ``artifacts/<out_name>``: the dominance-pruned archive,
+    the outer Pareto front over (-hypervolume, library area), per-candidate
+    telemetry and the spec-memo / inner-search cache statistics.
+    """
+    from repro import codesign, foundry
+
+    if params is None:
+        params = load_params()
+    evaluate = make_batched_evaluator(params, n_images, noise_scale, mesh=mesh)
+    eval_key = jax.random.PRNGKey(seed + 1000)
+
+    def accuracy_batch(genomes):
+        return evaluate(genomes, eval_key)
+
+    # The foundry seed candidate is a warm-start aid, only encodable for
+    # spec counts the deterministic paper family covers; larger placement
+    # spaces simply search cold.
+    try:
+        compat = codesign.encode(codesign.paper_family_params(n_specs))
+    except ValueError:
+        log(f"n_specs={n_specs} beyond the paper family; searching without "
+            "a foundry seed candidate (no warm start, no baseline import)")
+        compat = None
+    baseline = None
+    if compat is not None and baseline_name and (
+            ARTIFACTS / baseline_name).exists():
+        baseline = json.loads((ARTIFACTS / baseline_name).read_text())
+
+    warm = None
+    if baseline is not None:
+        base_variant_names = [
+            v["name"] for v in baseline.get("variants", [])
+        ]
+        default_names = [
+            s.name for s in foundry.default_family()[:n_specs]
+        ]
+        if baseline.get("k_expanded") != len(schemes.SEED_VARIANTS) + n_specs:
+            # Its genomes use an alphabet of a different size, so they can
+            # neither warm-start nor be remapped; the points themselves are
+            # still valid committed designs and are imported verbatim below.
+            log(f"baseline k_expanded={baseline.get('k_expanded')} does not "
+                f"match n_specs={n_specs}; skipping warm start (points "
+                "still imported verbatim)")
+        elif base_variant_names != default_names:
+            # A custom-family baseline (foundry_study(family=...)) uses ids
+            # 9.. for specs the compat genome does not encode — remapping
+            # its genomes would silently mis-score them. Its points are
+            # still valid committed designs, so they are imported verbatim
+            # below; only the warm start is skipped.
+            log("baseline variants are not default_family(); skipping warm "
+                "start (points still imported verbatim)")
+        else:
+            # Foundry ids 9+i follow default_family order; codesign assigns
+            # ids over the same maps in canonical (sorted-map) order — remap.
+            canon = codesign.novel_specs(compat)
+            canon_id = {
+                sp.to_map().tobytes(): len(schemes.SEED_VARIANTS) + j
+                for j, sp in enumerate(canon)
+            }
+            remap = np.arange(len(schemes.SEED_VARIANTS) + n_specs)
+            for i, sp in enumerate(foundry.default_family()[:n_specs]):
+                remap[len(schemes.SEED_VARIANTS) + i] = canon_id[
+                    sp.to_map().tobytes()
+                ]
+            warm = [
+                remap[np.asarray(ind["genome"], np.int32)].astype(np.int32)
+                for ind in baseline["front"]
+            ]
+
+    cfg = codesign.CodesignConfig(
+        n_specs=n_specs, outer_pop=outer_pop,
+        outer_generations=outer_generations, inner_pop=inner_pop,
+        inner_generations=inner_generations,
+        # Multiset memo keys are only sound while positional accuracy
+        # spread is below the evaluator's resolution (same guard as
+        # nsga_study): amplified noise keys on the exact sequence.
+        inner_position_agnostic=noise_scale <= 1.0,
+        char_n=char_n, char_seed=char_seed, seed=seed,
+    )
+    log(f"== codesign search (outer {outer_pop}x{outer_generations}, inner "
+        f"{inner_pop}x{inner_generations}, n_images={n_images}) ==")
+    res = codesign.codesign_search(
+        accuracy_batch, genome_len=N_SLOTS, cfg=cfg,
+        seed_candidates=[(compat, warm)] if compat is not None else (),
+        mesh=mesh, log=log,
+    )
+    archive = res["archive"]
+
+    search_dominates = None
+    dominates = None
+    if baseline is not None:
+        base_objs = np.array([ind["objectives"] for ind in baseline["front"]])
+        # Falsifiable: the search's OWN discoveries alone — warm re-scores
+        # (which under the default settings reproduce the committed values
+        # exactly, making them dominant by construction) and imported
+        # baseline points are both excluded.
+        search_objs = np.array([
+            list(p.objectives) for p in archive.points
+            if p.source == "search"
+        ])
+        search_dominates = nsga2.front_weakly_dominates(
+            search_objs, base_objs
+        )
+        # Deliverable: the archive united with the committed baseline points
+        # (each is a valid K=16 co-design) — dominant by construction.
+        for ind in baseline["front"]:
+            archive.insert(codesign.ArchivePoint(
+                objectives=tuple(map(float, ind["objectives"])),
+                genome=tuple(map(int, ind["genome"])),
+                alphabet_key="foundry_baseline",
+                source="baseline",
+            ))
+        archive.add_alphabet("foundry_baseline", {
+            "spec_names": base_variant_names,
+            "source": baseline_name,
+        })
+        dominates = nsga2.front_weakly_dominates(
+            archive.front_objectives(), base_objs
+        )
+        log(f"archive front: {len(archive)} points; weakly dominates "
+            f"foundry K={baseline['k_expanded']} front: {dominates} "
+            f"(search-only: {search_dominates})")
+
+    # The archive's canonical (objective-sorted) point list is reported once
+    # as "front"; "archive" keeps the alphabet side table + telemetry.
+    arch_dict = archive.as_dict()
+    front_points = arch_dict.pop("points")
+    results = {
+        "n_specs": n_specs,
+        "n_images": n_images,
+        "seed": seed,
+        "noise_scale": noise_scale,
+        "config": res["config"],
+        "reference_point": res["reference_point"],
+        "outer_front": res["outer_front"],
+        "archive": arch_dict,
+        "front": front_points,
+        "stats": res["stats"],
+        "baseline": baseline_name if baseline is not None else None,
+        "weakly_dominates_foundry_front": dominates,
+        "search_front_weakly_dominates_baseline": search_dominates,
+    }
+    if out_name:
+        ARTIFACTS.mkdir(exist_ok=True)
+        out = ARTIFACTS / out_name
+        out.write_text(json.dumps(results, indent=1))
+        log(f"wrote {out}")
+    return results
+
+
 def run_all(
     *,
     ks=(2, 3, 4, 5, 8),

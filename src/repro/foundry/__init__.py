@@ -29,6 +29,7 @@ the alphabet to K>=16 and re-runs the interleaving search.
 from repro.foundry.characterize import (
     Characterization,
     characterize,
+    characterize_batch,
     characterize_family,
 )
 from repro.foundry.hwcost import CostModel, calibrate, features
@@ -58,6 +59,7 @@ __all__ = [
     "Region",
     "calibrate",
     "characterize",
+    "characterize_batch",
     "characterize_family",
     "column_depth_family",
     "default_family",

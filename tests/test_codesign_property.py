@@ -1,0 +1,56 @@
+"""Hypothesis sweeps of the codesign genome-codec invariants.
+
+The property bodies live in tests/test_codesign.py (check_* helpers) so
+fixed-case versions run even without hypothesis; this module widens them to
+random gene vectors: repair always lands (idempotently) in the valid set,
+decode/encode round-trips, crossover/mutation are closed, and the spec-set
+memo key is block-order invariant.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (CI installs it)")
+from hypothesis import given, settings, strategies as st
+
+from repro.codesign import genome as cg
+from tests.test_codesign import (
+    check_closure_property,
+    check_repair_property,
+    check_roundtrip_property,
+    check_spec_set_key_property,
+)
+
+_SEEDS = st.integers(0, 2**31 - 1)
+
+
+def _genomes(n_specs):
+    return st.lists(
+        st.integers(-(2**20), 2**20),
+        min_size=n_specs * cg.N_GENES,
+        max_size=n_specs * cg.N_GENES,
+    ).map(lambda xs: np.asarray(xs, np.int64))
+
+
+@given(st.integers(1, 6).flatmap(_genomes))
+@settings(max_examples=50, deadline=None)
+def test_repair_always_valid_and_idempotent(raw):
+    check_repair_property(raw)
+
+
+@given(st.integers(1, 5).flatmap(_genomes))
+@settings(max_examples=50, deadline=None)
+def test_decode_encode_roundtrip(raw):
+    check_roundtrip_property(raw)
+
+
+@given(st.integers(1, 4).flatmap(
+    lambda n: st.tuples(_genomes(n), _genomes(n))), _SEEDS)
+@settings(max_examples=40, deadline=None)
+def test_operator_closure(pair, seed):
+    check_closure_property(pair[0], pair[1], seed)
+
+
+@given(st.integers(1, 4).flatmap(_genomes), _SEEDS)
+@settings(max_examples=40, deadline=None)
+def test_spec_set_key_block_order_invariant(raw, seed):
+    check_spec_set_key_property(raw, seed)

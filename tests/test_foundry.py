@@ -276,6 +276,57 @@ def test_pallas_jit_cache_not_stale_across_registration():
         assert (got.view(np.uint32) == want.view(np.uint32)).all()
 
 
+def test_register_unregister_cycles_bounded_recompiles_no_leaks():
+    """Regression (codesign workload): thousands of transient registrations.
+
+    A jitted consumer that takes the registry-backed tables as traced
+    operands (the make_fast_evaluator pattern — their registry-sized shapes
+    key the jit cache) must retrace once per distinct alphabet SIZE, not
+    once per register/rollback cycle: 50 cycles through the same K must
+    reuse two traces (K=9, K=10). Afterwards every registry and derived
+    cache must be exactly at the seed state — no leaked names, moments,
+    hardware rows or stale id-indexed tables.
+    """
+    import jax.numpy as jnp
+
+    traces = []
+
+    @jax.jit
+    def consume(mu_t, sg_t, stack):
+        traces.append(1)  # python side effect: runs only when tracing
+        return mu_t.sum() + sg_t.sum() + stack.sum()
+
+    def call():
+        mu_t, sg_t = surrogate.moment_tables()
+        consume(jnp.asarray(mu_t), jnp.asarray(sg_t),
+                jnp.asarray(schemes.scheme_stack()))
+
+    names0 = schemes.variant_names()
+    spec = foundry.PlacementSpec(
+        "fnd_churn", (foundry.Region(code=C.NC1, cols=(0, 12)),))
+    char = foundry.characterize(spec, n=1 << 8)  # once; cycles reuse it
+    hw = foundry.calibrate().predict(spec.to_map())
+
+    call()  # K = 9 trace
+    jit_cache0 = getattr(consume, "_cache_size", lambda: None)()
+    for _ in range(50):
+        with foundry.temporary_variants():
+            foundry.register(spec, characterization=char, hw=hw)
+            call()  # K = 10
+        call()  # restored: K = 9
+    assert len(traces) == 2, f"recompiled {len(traces)} times over 50 cycles"
+    if jit_cache0 is not None:
+        assert consume._cache_size() == jit_cache0 + 1
+    # No leaked registry state in any of the three module registries.
+    assert schemes.variant_names() == names0
+    assert len(surrogate.moment_tables()[0]) == len(names0)
+    assert len(surrogate.variant_stats()) == len(names0)
+    assert hwmodel.PDP_PJ.shape == (len(names0),)
+    assert schemes.scheme_stack().shape[0] == len(names0)
+    with pytest.raises(KeyError):
+        hwmodel.spec("fnd_churn")
+
+
 def test_population_conv_with_expanded_alphabet(registered):
     """The NSGA-II population path (fused conv, CRN) accepts foundry ids and
     stays consistent with per-genome surrogate_xla calls."""
