@@ -1,0 +1,200 @@
+"""CI benchmark-regression gate: fresh BENCH_*.json vs committed baselines.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --fresh bench_fresh --baseline artifacts
+
+Each Rule names one metric (dotted path into one BENCH_*.json) with a
+direction and a tolerance band: a "lower"-is-better metric fails when the
+fresh value exceeds baseline * (1 + tol); a "higher"-is-better one fails
+when fresh drops below baseline * (1 - tol). The default band is 25% —
+wide enough for shared-runner noise, tight enough to catch a real
+regression (the fused-epilogue work this gate protects moved the surrogate
+matmul from 5.2x to ~2.2x the exact cost; a 25% band cannot silently give
+that back).
+
+`baseline_ceiling` is an absolute acceptance bound checked on the
+COMMITTED baseline, not the fresh run: the repo's recorded state must stay
+near the surrogate's analytic cost floor regardless of how noisy the
+current runner is; the relative band then keeps fresh runs honest against
+that record. The floor itself: the surrogate runs TWO GEMMs (mean and
+variance contractions) where exact runs one, and on a serial host they
+cannot overlap, so relative cost is bounded below by ~2.05x (measured at
+256^3: one GEMM 299us, two GEMMs 612us, noise epilogue +77us memory-bound
+pass => 675us fused vs 299us exact, 2.2x). The ceiling of 2.5 pins the
+recorded state within ~15% of that floor; the seed's 5.2x (an in-graph
+erfinv re-evaluated every call) would fail it by 2x.
+
+Missing-metric policy: a metric absent from the BASELINE is skipped with a
+warning (new metrics may land one PR before their baselines are
+refreshed); a gated metric absent from the FRESH run fails (the smoke
+benchmark should have produced it — losing a metric is itself a
+regression).
+
+Refresh baselines after an intentional perf change with --update, then
+commit the rewritten artifacts/ files.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import shutil
+import sys
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One gated metric: dotted `path` into `file`, direction + band."""
+
+    file: str
+    path: str
+    direction: str  # "lower" | "higher" is better
+    tol: float = 0.25
+    # Where the metric lives in the committed baselines, when it differs
+    # from the fresh layout (the smoke run writes the sharded sweep to its
+    # own file; the committed trajectory nests it inside BENCH_nsga2.json).
+    baseline_file: str | None = None
+    baseline_path: str | None = None
+    # Absolute acceptance bound on the BASELINE value (direction applies).
+    baseline_ceiling: float | None = None
+
+
+RULES: tuple[Rule, ...] = (
+    # Relative-cost / speedup ratios: dimensionless, so portable across
+    # runners, but their denominators are small (one GEMM, one generation)
+    # and scheduler-sensitive — they get the wider 35% band. The ceiling on
+    # the committed fused ratio is the acceptance bound: within ~15% of the
+    # two-GEMM serial floor (see module docstring).
+    Rule("BENCH_engine.json", "matmul_relative_cost.surrogate_fused",
+         "lower", tol=0.35, baseline_ceiling=2.5),
+    Rule("BENCH_engine.json", "matmul_relative_cost.surrogate_xla",
+         "lower", tol=0.35),
+    Rule("BENCH_nsga2_sharded.json", "speedup_2dev_vs_1dev", "higher",
+         tol=0.35, baseline_file="BENCH_nsga2.json",
+         baseline_path="sharded.speedup_2dev_vs_1dev"),
+    # Absolute throughput: may not regress >25% vs the committed baseline.
+    Rule("BENCH_engine.json", "conv_population.fused_genomes_per_sec",
+         "higher"),
+    Rule("BENCH_engine.json", "emulator.speedup", "higher"),
+    Rule("BENCH_foundry.json", "characterize_pairs_per_sec", "higher"),
+    Rule("BENCH_codesign.json", "inner_evals_per_sec", "higher"),
+)
+
+
+def _load(directory: pathlib.Path, name: str):
+    p = directory / name
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def _lookup(doc, dotted: str):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def check(fresh_dir, baseline_dir, rules=RULES) -> list[str]:
+    """Evaluate every rule; returns the list of failure messages."""
+    fresh_dir = pathlib.Path(fresh_dir)
+    baseline_dir = pathlib.Path(baseline_dir)
+    failures: list[str] = []
+    for r in rules:
+        b_file = r.baseline_file or r.file
+        b_path = r.baseline_path or r.path
+        label = f"{r.file}:{r.path}"
+        fresh = _lookup(_load(fresh_dir, r.file) or {}, r.path)
+        base = _lookup(_load(baseline_dir, b_file) or {}, b_path)
+        if base is None:
+            print(f"SKIP  {label}: no baseline in {baseline_dir / b_file} "
+                  "— refresh baselines to gate it")
+            continue
+        if fresh is None:
+            failures.append(f"{label}: missing from fresh run "
+                            f"({fresh_dir / r.file})")
+            print(f"FAIL  {label}: fresh metric missing")
+            continue
+        if r.baseline_ceiling is not None:
+            ok_ceiling = (base <= r.baseline_ceiling if r.direction == "lower"
+                          else base >= r.baseline_ceiling)
+            if not ok_ceiling:
+                failures.append(
+                    f"{label}: committed baseline {base:.4g} violates the "
+                    f"acceptance bound {r.baseline_ceiling:.4g} "
+                    f"({r.direction} is better)")
+                print(f"FAIL  {label}: baseline {base:.4g} vs ceiling "
+                      f"{r.baseline_ceiling:.4g}")
+                continue
+        if r.direction == "lower":
+            bound = base * (1.0 + r.tol)
+            ok = fresh <= bound
+        else:
+            bound = base * (1.0 - r.tol)
+            ok = fresh >= bound
+        status = "ok  " if ok else "FAIL"
+        print(f"{status}  {label}: fresh={fresh:.4g} baseline={base:.4g} "
+              f"bound={bound:.4g} ({r.direction} better, tol {r.tol:.0%})")
+        if not ok:
+            failures.append(
+                f"{label}: fresh={fresh:.4g} regressed past "
+                f"{bound:.4g} (baseline {base:.4g}, tol {r.tol:.0%})")
+    return failures
+
+
+def update(fresh_dir, baseline_dir, rules=RULES) -> None:
+    """Adopt the fresh run as the committed baseline for every gated file."""
+    fresh_dir = pathlib.Path(fresh_dir)
+    baseline_dir = pathlib.Path(baseline_dir)
+    baseline_dir.mkdir(parents=True, exist_ok=True)
+    for r in rules:
+        src = fresh_dir / r.file
+        if not src.exists():
+            print(f"skip {r.file}: not in fresh run")
+            continue
+        if r.baseline_file is None:
+            shutil.copyfile(src, baseline_dir / r.file)
+            print(f"updated {baseline_dir / r.file}")
+        else:  # graft the single metric into the differently-shaped baseline
+            val = _lookup(json.loads(src.read_text()), r.path)
+            if val is None:
+                continue
+            doc = _load(baseline_dir, r.baseline_file) or {}
+            cur = doc
+            *parents, leaf = (r.baseline_path or r.path).split(".")
+            for part in parents:
+                cur = cur.setdefault(part, {})
+            cur[leaf] = val
+            (baseline_dir / r.baseline_file).write_text(
+                json.dumps(doc, indent=1))
+            print(f"updated {baseline_dir / r.baseline_file}:"
+                  f"{r.baseline_path}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", required=True,
+                    help="directory with this run's BENCH_*.json")
+    ap.add_argument("--baseline", default="artifacts",
+                    help="directory with committed baselines")
+    ap.add_argument("--update", action="store_true",
+                    help="adopt the fresh run as the new baseline")
+    args = ap.parse_args(argv)
+    if args.update:
+        update(args.fresh, args.baseline)
+        return 0
+    failures = check(args.fresh, args.baseline)
+    if failures:
+        print(f"\n{len(failures)} benchmark regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nbenchmark regression gate: all metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,10 +19,14 @@ from repro.core import engine, surrogate
 def _bench(fn, *args, iters: int = 5, warmup: int = 3) -> float:
     for _ in range(warmup):  # compile + thread-pool/allocator warm-up
         jax.block_until_ready(fn(*args))
-    t0 = time.time()
+    times = []
     for _ in range(iters):
+        t0 = time.time()
         jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / iters * 1e6
+        times.append(time.time() - t0)
+    # Median per-call time: robust to scheduler preemption on shared
+    # runners, where a single descheduled call can double the mean.
+    return float(np.median(times)) * 1e6
 
 
 def engine_bench(m: int = 256, k: int = 256, n: int = 256, pop: int = 16,
@@ -86,6 +90,31 @@ def engine_bench(m: int = 256, k: int = 256, n: int = 256, pop: int = 16,
         "speedup": t_per / t_fused,
         "fused_genomes_per_sec": pop / (t_fused * 1e-6),
     }
+
+    # Batched bit-exact emulator: V-variant stacked sweep (the foundry's
+    # characterization primitive) vs V scalar fp32_multiply_batch sweeps.
+    from repro.core import fp32_mul, schemes
+    from repro.kernels import ops
+
+    n_emu = 1 << 14
+    a_e = rng.standard_normal(n_emu).astype(np.float32)
+    b_e = rng.standard_normal(n_emu).astype(np.float32)
+    maps = np.stack([schemes.scheme_map(v) for v in schemes.AM_SEED_VARIANTS])
+    n_var = maps.shape[0]
+    t_stack = _bench(lambda: ops.fp32_multiply_stacked(a_e, b_e, maps),
+                     iters=max(1, iters // 2), warmup=1)
+    t_scalar = _bench(
+        lambda: [fp32_mul.fp32_multiply_batch(a_e, b_e, m_) for m_ in maps],
+        iters=max(1, iters // 2), warmup=1)
+    out["emulator"] = {
+        "variants": n_var,
+        "operands": n_emu,
+        "stacked_us": t_stack,
+        "scalar_us": t_scalar,
+        "speedup": t_scalar / t_stack,
+        "stacked_mpairs_per_sec": n_var * n_emu / t_stack,
+    }
+
     print(f"engine_matmul_exact_{m}x{k}x{n},{t_exact:.1f},1.00x")
     for b in ("surrogate_xla", "surrogate_fused"):
         print(f"engine_matmul_{b}_{m}x{k}x{n},{out['matmul_us'][b]:.1f},"
@@ -94,6 +123,8 @@ def engine_bench(m: int = 256, k: int = 256, n: int = 256, pop: int = 16,
           f"{t_bit*scale/t_exact:.0f}x_extrapolated")
     print(f"engine_conv_population_pop{pop},{t_fused:.1f},"
           f"{out['conv_population']['speedup']:.2f}x_vs_per_genome")
+    print(f"engine_emulator_stacked_v{n_var}_n{n_emu},{t_stack:.1f},"
+          f"{out['emulator']['speedup']:.2f}x_vs_scalar")
     return out
 
 

@@ -1,31 +1,31 @@
 """Benchmark aggregator: one section per paper table/figure + framework perf.
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run            # full sweep
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI smoke subset
 
 Besides the printed sections, machine-readable metrics persist under
-artifacts/ so the perf trajectory is trackable across PRs (CI uploads them
-as workflow artifacts): BENCH_nsga2.json (search throughput: genomes/sec,
-wall-clock per generation, memo-cache hit rate, plus the "sharded" section —
-genomes/sec per forced-host-device count and the 2-device speedup),
-BENCH_engine.json (per-backend AM engine matmul/conv timings),
-BENCH_foundry.json (variant-foundry synthesis/characterization throughput
-plus seed-vs-expanded alphabet evaluator rows) and BENCH_codesign.json
+artifacts/ (or --out DIR) so the perf trajectory is trackable across PRs
+(CI uploads them as workflow artifacts and gates them with
+benchmarks.check_regression): BENCH_nsga2.json (search throughput:
+genomes/sec, wall-clock per generation, memo-cache hit rate, plus the
+"sharded" section — genomes/sec per forced-host-device count and the
+2-device speedup), BENCH_engine.json (per-backend AM engine matmul/conv
+timings plus the batched bit-exact emulator rows), BENCH_foundry.json
+(variant-foundry synthesis/characterization throughput plus
+seed-vs-expanded alphabet evaluator rows) and BENCH_codesign.json
 (two-level placement+interleaving search: specs characterized/sec,
 inner-evals/sec, memo hit rates at every level).
+
+--smoke runs the runner-sized subset the PR gate measures (engine,
+foundry, codesign, and the 1/2-device sharded-search sweep — written to
+BENCH_nsga2_sharded.json) and skips the paper-table sections.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import traceback
-
-from benchmarks import fig2_cnn, kernel_bench, roofline_summary, table1_hw, table2_errors
-
-ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
-BENCH_NSGA2 = ARTIFACTS / "BENCH_nsga2.json"
-BENCH_ENGINE = ARTIFACTS / "BENCH_engine.json"
-BENCH_FOUNDRY = ARTIFACTS / "BENCH_foundry.json"
-BENCH_CODESIGN = ARTIFACTS / "BENCH_codesign.json"
 
 
 def _section(title: str, fn):
@@ -37,51 +37,79 @@ def _section(title: str, fn):
         return None
 
 
-def main() -> None:
-    _section("Table I — hardware characteristics (paper cost model)", table1_hw.main)
-    _section("Table II — FP32 AM error characteristics (N=400k)", table2_errors.main)
+def _write(out_dir: pathlib.Path, name: str, metrics) -> None:
+    if metrics is None:
+        return
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / name
+    path.write_text(json.dumps(metrics, indent=1))
+    print(f"wrote {path}")
+
+
+def smoke(out_dir: pathlib.Path) -> None:
+    """The PR-gate subset: what the CI runner can measure in minutes."""
+    from benchmarks import kernel_bench
+
+    _write(out_dir, "BENCH_engine.json", _section(
+        "AM engine — per-backend matmul/conv throughput (smoke)",
+        lambda: kernel_bench.engine_bench(iters=5, pop=8)))
+    _write(out_dir, "BENCH_foundry.json", _section(
+        "Variant foundry — synthesis/characterization/expanded-alphabet eval",
+        kernel_bench.foundry_bench))
+    _write(out_dir, "BENCH_codesign.json", _section(
+        "Codesign — two-level placement+interleaving search throughput",
+        kernel_bench.codesign_bench))
+    _write(out_dir, "BENCH_nsga2_sharded.json", _section(
+        "NSGA-II sharded search — genomes/sec per host-device count",
+        lambda: kernel_bench.nsga2_sharded_bench(device_counts=(1, 2))))
+
+
+def full(out_dir: pathlib.Path) -> None:
+    from benchmarks import (fig2_cnn, kernel_bench, roofline_summary,
+                            table1_hw, table2_errors)
+
+    _section("Table I — hardware characteristics (paper cost model)",
+             table1_hw.main)
+    _section("Table II — FP32 AM error characteristics (N=400k)",
+             table2_errors.main)
     _section("Fig 2/4/5 — CNN: uniform AMs, NSGA-II interleaving, displacement",
              fig2_cnn.main)
     _section("Kernel micro-benchmarks (host)", kernel_bench.main)
-    engine_metrics = _section(
-        "AM engine — per-backend matmul/conv throughput", kernel_bench.engine_bench
-    )
-    if engine_metrics is not None:
-        ARTIFACTS.mkdir(exist_ok=True)
-        BENCH_ENGINE.write_text(json.dumps(engine_metrics, indent=1))
-        print(f"wrote {BENCH_ENGINE}")
-    foundry_metrics = _section(
+    _write(out_dir, "BENCH_engine.json", _section(
+        "AM engine — per-backend matmul/conv throughput",
+        kernel_bench.engine_bench))
+    _write(out_dir, "BENCH_foundry.json", _section(
         "Variant foundry — synthesis/characterization/expanded-alphabet eval",
-        kernel_bench.foundry_bench,
-    )
-    if foundry_metrics is not None:
-        ARTIFACTS.mkdir(exist_ok=True)
-        BENCH_FOUNDRY.write_text(json.dumps(foundry_metrics, indent=1))
-        print(f"wrote {BENCH_FOUNDRY}")
-    codesign_metrics = _section(
+        kernel_bench.foundry_bench))
+    _write(out_dir, "BENCH_codesign.json", _section(
         "Codesign — two-level placement+interleaving search throughput",
-        kernel_bench.codesign_bench,
-    )
-    if codesign_metrics is not None:
-        ARTIFACTS.mkdir(exist_ok=True)
-        BENCH_CODESIGN.write_text(json.dumps(codesign_metrics, indent=1))
-        print(f"wrote {BENCH_CODESIGN}")
+        kernel_bench.codesign_bench))
     nsga2_metrics = _section(
         "NSGA-II search throughput — batched vs per-individual evaluation",
-        kernel_bench.nsga2_bench,
-    )
+        kernel_bench.nsga2_bench)
     sharded_metrics = _section(
         "NSGA-II sharded search — genomes/sec per host-device count",
-        kernel_bench.nsga2_sharded_bench,
-    )
+        kernel_bench.nsga2_sharded_bench)
     if nsga2_metrics is not None:
         if sharded_metrics is not None:
             nsga2_metrics["sharded"] = sharded_metrics
-        ARTIFACTS.mkdir(exist_ok=True)
-        BENCH_NSGA2.write_text(json.dumps(nsga2_metrics, indent=1))
-        print(f"wrote {BENCH_NSGA2}")
+        _write(out_dir, "BENCH_nsga2.json", nsga2_metrics)
     _section("Roofline — dry-run derived, per (arch x shape x mesh)",
              roofline_summary.main)
+
+
+def main(argv=None) -> None:
+    default_out = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="runner-sized PR-gate subset only")
+    ap.add_argument("--out", type=pathlib.Path, default=default_out,
+                    help="directory for BENCH_*.json (default: artifacts/)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        smoke(args.out)
+    else:
+        full(args.out)
 
 
 if __name__ == "__main__":

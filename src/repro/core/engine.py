@@ -288,6 +288,31 @@ def fold_conv_gemm_weights(
     return wm.astype(np.float32), wv.astype(np.float32)
 
 
+def fold_matmul_weights(w, maps: CanonicalMap, *, noise_scale: float = 1.0):
+    """Fold per-slot moments into (P?, K, N) mean/var matmul weights.
+
+    Exactly the weight transforms of surrogate_xla's `_moment_matmul` —
+    ``w * (1 + mu)`` and ``(w * w) * (sg * sg)``, elementwise f32 — so the
+    folded path is bitwise identical to the per-call transform (elementwise
+    IEEE ops do not depend on host-vs-device spelling). Host (np) weights
+    fold on the host — once per engine call, not per jit invocation; traced
+    weights (w as a jit argument) fold in-graph.
+    """
+    vids = maps.vids if maps.pop else maps.vids[None]
+    mu, sg = moment_maps(vids, noise_scale)  # np f32 (P, K, N)
+    if isinstance(w, jax.core.Tracer):
+        wf = w.astype(jnp.float32)
+        wm = wf[None] * (1.0 + jnp.asarray(mu))
+        wv = (wf * wf)[None] * jnp.asarray(sg * sg)
+    else:
+        wf = np.asarray(w, np.float32)
+        wm = (wf[None] * (1.0 + mu)).astype(np.float32)
+        wv = ((wf * wf)[None] * (sg * sg)).astype(np.float32)
+    if not maps.pop:
+        wm, wv = wm[0], wv[0]
+    return wm, wv
+
+
 def conv_patch_matrix(x: np.ndarray, kh: int, kw: int) -> np.ndarray:
     """Tap-major im2col of images: (B, H, W, C) -> (kh*kw*C, B, ho*wo).
 
@@ -401,7 +426,11 @@ def _require_key(key, backend: str):
 
 
 def _noise(key, mean, var):
-    z = jax.random.normal(key, mean.shape, mean.dtype)
+    # crn_normal folds z to a trace-time constant when the key is concrete
+    # (the serving / benchmark configuration, where the engine call is traced
+    # inside a consumer's jit with a fixed key) — the draw itself costs more
+    # than the GEMM pair at search shapes on the build box.
+    z = surrogate.crn_normal(key, mean.shape, mean.dtype)
     return mean + z * jnp.sqrt(jnp.maximum(var, 0.0))
 
 
@@ -534,20 +563,35 @@ def _surrogate_matmul_xla(ctx, x, w, cmap, key):
 
 
 def _surrogate_matmul_fused(ctx, x, w, cmap, key):
+    """Vectorized surrogate matmul: moments folded into (P?, K, N) weights
+    once per call, both contractions + the CRN noise epilogue dispatched as
+    one kernel op (kernels/ops.py::am_surrogate_matmul_epilogue — a single
+    Pallas launch on TPU, the stacked batched GEMM spelling elsewhere).
+    Bitwise identical to surrogate_xla's per-genome op sequence under CRN:
+    the folded transforms, the per-output-element dot order, and the z
+    realization (one z per output position, shared across the population)
+    are all unchanged."""
     from repro.kernels import ops
 
     _require_key(key, "surrogate_fused")
-
-    def one(xs, m):
-        mu, sg = moment_maps(m.vids, ctx.noise_scale)
-        mean, var = ops.am_surrogate_moments(
-            xs, w, jnp.asarray(mu), jnp.asarray(sg), block=ctx.block
-        )
-        if ctx.return_moments:
-            return mean, var
-        return _noise(key, mean, var)
-
-    return _map_pop(ctx, cmap, one, x)
+    wm, wv = fold_matmul_weights(w, cmap, noise_scale=ctx.noise_scale)
+    wm_j, wv_j = jnp.asarray(wm), jnp.asarray(wv)
+    xf = x.astype(jnp.float32)
+    if ctx.return_moments:
+        if not cmap.pop:
+            return ops.am_surrogate_moments_folded(
+                xf, wm_j, wv_j, block=ctx.block)
+        if ctx.pop_x:
+            mean = jnp.einsum("pmk,pkn->pmn", xf, wm_j)
+            var = jnp.einsum("pmk,pkn->pmn", xf * xf, wv_j)
+        else:
+            mean = jnp.einsum("mk,pkn->pmn", xf, wm_j)
+            var = jnp.einsum("mk,pkn->pmn", xf * xf, wv_j)
+        return mean, var
+    # CRN: z is drawn for the single-genome (M, N) output and shared across
+    # the population axis inside the epilogue op.
+    z = surrogate.crn_normal(key, (xf.shape[-2], wm_j.shape[-1]), jnp.float32)
+    return ops.am_surrogate_matmul_epilogue(xf, wm_j, wv_j, z, block=ctx.block)
 
 
 def _surrogate_conv2d_xla(ctx, x, w, cmap, key):
@@ -618,7 +662,7 @@ def _surrogate_conv2d_fused(ctx, x, w, cmap, key):
         return mean, var
     # CRN: z is drawn WITHOUT the population axis and broadcast over it.
     z_shape = mean.shape[1:] if cmap.pop else mean.shape
-    z = jax.random.normal(key, z_shape, mean.dtype)
+    z = surrogate.crn_normal(key, z_shape, mean.dtype)
     return mean + z * jnp.sqrt(jnp.maximum(var, 0.0))
 
 
@@ -754,43 +798,74 @@ class AMEngine:
 
     def _sharded_matmul(self, name, ctx: _Ctx, x2, w, cmap: CanonicalMap, key):
         _require_key(key, name)
-        from repro.kernels import ops
-
         nshard = self._pop_shards(name, cmap)
         p = cmap.population
         vids = pad_population(cmap.vids, nshard)
-        mu, sg = moment_maps(vids, self.noise_scale)  # (Pp, K, N) np
-        fused, block = name == "surrogate_fused", ctx.block
         pop_x, return_moments = ctx.pop_x, ctx.return_moments
         if pop_x:
             x2 = _pad_population_jax(jnp.asarray(x2), vids.shape[0])
 
-        def per_shard(*args):
-            if pop_x:
-                mu_s, sg_s, x_s, key_s = args
-                mapped = (mu_s, sg_s, x_s)
-            else:
-                mu_s, sg_s, key_s = args
-                mapped = (mu_s, sg_s)
+        # CRN: one z for the single-genome (M, N) output, computed OUTSIDE
+        # shard_map from the global key (constant-folded when the key is
+        # concrete) and replicated — bitwise the same realization every
+        # shard previously drew from the replicated key.
+        if return_moments:
+            rep_args = ()
+        else:
+            z = surrogate.crn_normal(
+                key, (np.shape(x2)[-2], np.shape(w)[1]), jnp.float32)
+            rep_args = (z,)
 
-            def one(a):
-                xi = a[2] if pop_x else jnp.asarray(x2)
-                if fused:
-                    return ops.am_surrogate_moments(xi, w, a[0], a[1],
-                                                    block=block)
-                return _moment_matmul(xi, w, a[0], a[1])
+        if name == "surrogate_fused":
+            # The slice-invariant einsum formulation of the single-device
+            # fused backend: per-shard batched dots over host-folded weights.
+            wm, wv = fold_matmul_weights(
+                w, CanonicalMap(vids, True), noise_scale=self.noise_scale)
 
-            mean, var = jax.lax.map(one, mapped)
-            if return_moments:
-                return mean, var
-            z = jax.random.normal(key_s, mean.shape[1:], mean.dtype)
-            return mean + z[None] * jnp.sqrt(jnp.maximum(var, 0.0))
+            def per_shard(*args):
+                if pop_x:
+                    wm_s, wv_s, x_s = args[:3]
+                    xf = x_s.astype(jnp.float32)
+                    mean = jnp.einsum("pmk,pkn->pmn", xf, wm_s)
+                    var = jnp.einsum("pmk,pkn->pmn", xf * xf, wv_s)
+                else:
+                    wm_s, wv_s = args[:2]
+                    xf = jnp.asarray(x2).astype(jnp.float32)
+                    mean = jnp.einsum("mk,pkn->pmn", xf, wm_s)
+                    var = jnp.einsum("mk,pkn->pmn", xf * xf, wv_s)
+                if return_moments:
+                    return mean, var
+                z_s = args[-1]
+                return mean + z_s[None] * jnp.sqrt(jnp.maximum(var, 0.0))
 
-        pop_args = [jnp.asarray(mu), jnp.asarray(sg)]
+            pop_args = [jnp.asarray(wm), jnp.asarray(wv)]
+        else:  # surrogate_xla: lax.map of the per-genome op sequence
+            mu, sg = moment_maps(vids, self.noise_scale)  # (Pp, K, N) np
+
+            def per_shard(*args):
+                if pop_x:
+                    mu_s, sg_s, x_s = args[:3]
+                    mapped = (mu_s, sg_s, x_s)
+                else:
+                    mu_s, sg_s = args[:2]
+                    mapped = (mu_s, sg_s)
+
+                def one(a):
+                    xi = a[2] if pop_x else jnp.asarray(x2)
+                    return _moment_matmul(xi, w, a[0], a[1])
+
+                mean, var = jax.lax.map(one, mapped)
+                if return_moments:
+                    return mean, var
+                z_s = args[-1]
+                return mean + z_s[None] * jnp.sqrt(jnp.maximum(var, 0.0))
+
+            pop_args = [jnp.asarray(mu), jnp.asarray(sg)]
+
         if pop_x:
             pop_args.append(x2)
         out = self._shard_pop_call(
-            per_shard, tuple(pop_args), (key,),
+            per_shard, tuple(pop_args), rep_args,
             n_outs=2 if return_moments else 1)
         if return_moments:
             return out[0][:p], out[1][:p]
@@ -807,6 +882,19 @@ class AMEngine:
         if pop_x:
             xj = _pad_population_jax(xj, vids.shape[0])
 
+        # CRN: z for the single-genome (B, Ho, Wo, F) output, drawn OUTSIDE
+        # shard_map from the global key (constant-folded when the key is
+        # concrete) and replicated — bitwise the realization every shard
+        # previously drew in-graph from the replicated key.
+        if return_moments:
+            rep_args = ()
+        else:
+            b = xj.shape[-4]
+            ho, wo = xj.shape[-3] - kh + 1, xj.shape[-2] - kw + 1
+            z_dtype = jnp.result_type(xj.dtype, jnp.float32)
+            z = surrogate.crn_normal(key, (b, ho, wo, f), z_dtype)
+            rep_args = (z,)
+
         if name == "surrogate_xla":
             from repro.kernels import ref
 
@@ -818,10 +906,10 @@ class AMEngine:
 
             def per_shard(*args):
                 if pop_x:
-                    wmu_s, wsg_s, x_s, key_s = args
+                    wmu_s, wsg_s, x_s = args[:3]
                     mapped = (wmu_s, wsg_s, x_s)
                 else:
-                    wmu_s, wsg_s, key_s = args
+                    wmu_s, wsg_s = args[:2]
                     mapped = (wmu_s, wsg_s)
 
                 def one(a):
@@ -833,8 +921,8 @@ class AMEngine:
                 mean, var = jax.lax.map(one, mapped)
                 if return_moments:
                     return mean, var
-                z = jax.random.normal(key_s, mean.shape[1:], mean.dtype)
-                return mean + z[None] * jnp.sqrt(jnp.maximum(var, 0.0))
+                z_s = args[-1]
+                return mean + z_s[None] * jnp.sqrt(jnp.maximum(var, 0.0))
 
             pop_args = [w_mu, w_sg2] + ([xj] if pop_x else [])
         else:  # surrogate_fused: the slice-invariant einsum formulation
@@ -844,7 +932,7 @@ class AMEngine:
 
             def per_shard(*args):
                 if pop_x:
-                    wm_s, wv_s, x_s, key_s = args
+                    wm_s, wv_s, x_s = args[:3]
                     pats = jax.vmap(
                         lambda xs: _fused_conv_patches(xs, kh, kw)[0])(x_s)
                     b, ho, wo = (x_s.shape[1], x_s.shape[2] - kh + 1,
@@ -852,7 +940,7 @@ class AMEngine:
                     mean = jnp.einsum("pfk,pkm->pfm", wm_s, pats)
                     var = jnp.einsum("pfk,pkm->pfm", wv_s, pats * pats)
                 else:
-                    wm_s, wv_s, key_s = args
+                    wm_s, wv_s = args[:2]
                     pat, (b, ho, wo) = _fused_conv_patches(xj, kh, kw)
                     mean = jnp.einsum("pfk,km->pfm", wm_s, pat)
                     var = jnp.einsum("pfk,km->pfm", wv_s, pat * pat)
@@ -864,13 +952,13 @@ class AMEngine:
                 mean, var = unflatten(mean), unflatten(var)
                 if return_moments:
                     return mean, var
-                z = jax.random.normal(key_s, mean.shape[1:], mean.dtype)
-                return mean + z[None] * jnp.sqrt(jnp.maximum(var, 0.0))
+                z_s = args[-1]
+                return mean + z_s[None] * jnp.sqrt(jnp.maximum(var, 0.0))
 
             pop_args = [jnp.asarray(wm), jnp.asarray(wv)] + ([xj] if pop_x else [])
 
         out = self._shard_pop_call(
-            per_shard, tuple(pop_args), (key,),
+            per_shard, tuple(pop_args), rep_args,
             n_outs=2 if return_moments else 1)
         if return_moments:
             return out[0][:p], out[1][:p]

@@ -185,12 +185,31 @@ def tile_moments(variant_tiles, k: int, n: int, tile_k: int, tile_n: int):
     return mu, sg
 
 
+def crn_normal(key, shape, dtype=jnp.float32):
+    """CRN noise draw, constant-folded at trace time when `key` is concrete.
+
+    jax.random.normal is internally jitted, so under a consumer's trace it
+    inlines into the graph even when the key is a compile-time constant —
+    re-running threefry + erfinv (~2/3 of the surrogate matmul's wall time
+    on the build box) on every call. ensure_compile_time_eval evaluates the
+    draw eagerly at trace time instead, baking z in as a constant. Traced
+    keys (key as a jit argument) keep the in-graph draw. The realization is
+    bitwise identical either way, so the engine's CRN invariant — z a
+    function of the global call key and the single-genome output shape
+    only — is preserved.
+    """
+    if isinstance(key, jax.core.Tracer):
+        return jax.random.normal(key, shape, dtype)
+    with jax.ensure_compile_time_eval():
+        return jax.random.normal(key, shape, dtype)
+
+
 def am_matmul_surrogate(x, w, mu, sigma, key):
     """Statistical AM matmul: x (..., K) @ w (K, N) under per-(K,N) moments."""
     xw = x.astype(jnp.float32)
     mean = xw @ (w * (1.0 + mu))
     var = (xw * xw) @ ((w * w) * (sigma * sigma))
-    z = jax.random.normal(key, mean.shape, dtype=mean.dtype)
+    z = crn_normal(key, mean.shape, mean.dtype)
     return mean + z * jnp.sqrt(jnp.maximum(var, 0.0))
 
 

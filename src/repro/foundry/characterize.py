@@ -161,22 +161,18 @@ def _multiply_stacked(
 ) -> np.ndarray:
     """Emulate (V, n) products of one operand stream under V scheme maps.
 
-    One jitted call per chunk covers every variant: the maps broadcast as a
-    leading axis against the shared operands, so the Booth partial-product
+    Thin wrapper over the shared batched emulator entry point
+    (kernels/ops.py fp32_multiply_stacked): the maps broadcast as a leading
+    axis against the shared operands, so the Booth partial-product
     generation (the expensive, variant-independent half of the emulation) is
     computed once per chunk and only the compressor stages expand per
     variant. Bit-identical to V independent `fp32_multiply_batch` sweeps —
-    the per-element op sequence does not change under broadcasting.
+    the per-element op sequence does not change under broadcasting (or under
+    the Pallas grid spelling ops selects on TPU).
     """
-    import jax.numpy as jnp
+    from repro.kernels import ops
 
-    codes = jnp.asarray(maps)[:, None]  # (V, 1, 3, 48)
-    outs = []
-    for i in range(0, a.size, chunk):
-        outs.append(np.asarray(fp32_mul._fp32_multiply_jit(
-            a[i : i + chunk][None], b[i : i + chunk][None], codes
-        )))
-    return np.concatenate(outs, axis=1)
+    return ops.fp32_multiply_stacked(a, b, maps, chunk=chunk)
 
 
 def characterize_batch(

@@ -1,0 +1,98 @@
+"""Batched bit-exact FP32-multiplier emulation Pallas kernel.
+
+The foundry's characterization sweeps emulate the same operand stream under
+many compressor-code variants (foundry.characterize_batch). The expensive
+half of the emulation — radix-8 Booth partial-product generation, (10, 48)
+bits per multiply — is variant-INDEPENDENT: only the compressor stages read
+the scheme codes. This kernel batches the sweep over (variant block x
+operand chunk) grid programs, computing each chunk's Booth PPM once and
+broadcasting it against the block's code maps, the same amortization the
+host path gets from `fp32_mul.fp32_multiply` broadcasting, expressed as a
+Pallas grid so characterization-sized sweeps run on-device.
+
+VMEM per program: the broadcast PPM tensor (gv, chunk, 10, 48) int32 =
+gv * chunk * 1920 B; the default (gv=8, chunk=4096) is 60 MiB of *logical*
+intermediate, but only the (1, chunk) Booth half is materialized before the
+compressor stages expand per variant — the chooser budget tracks the
+post-broadcast compressor live set (3 rows x 48 cols per variant-element).
+
+Bit-identical per variant to scalar `fp32_mul.fp32_multiply_batch` sweeps:
+broadcasting never changes the per-element op sequence (asserted against
+the golden fixtures in tests/test_emulator_batch.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import fp32_mul
+
+# (variant block, operand chunk) defaults: matches the host batched sweep's
+# 2^15-element per-group budget (foundry.characterize_batch).
+DEFAULT_VARIANT_BLOCK = 8
+DEFAULT_CHUNK = 1 << 12
+
+
+def _kernel(a_ref, b_ref, codes_ref, out_ref):
+    a = a_ref[...]  # (chunk,)
+    b = b_ref[...]
+    codes = codes_ref[...]  # (gv, 3, 48)
+    # (gv, 1, 3, 48) vs (1, chunk): the Booth PPM is generated on the
+    # (1, chunk) operands once; only the compressor stages expand over gv.
+    out_ref[...] = fp32_mul.fp32_multiply(a[None, :], b[None, :],
+                                          codes[:, None])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("variant_block", "chunk", "interpret"))
+def _stacked_jit(a, b, maps, *, variant_block, chunk, interpret):
+    v, n = maps.shape[0], a.shape[0]
+    grid = (v // variant_block, n // chunk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda vi, ci: (ci,)),
+            pl.BlockSpec((chunk,), lambda vi, ci: (ci,)),
+            pl.BlockSpec((variant_block, 3, 48), lambda vi, ci: (vi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((variant_block, chunk),
+                               lambda vi, ci: (vi, ci)),
+        out_shape=jax.ShapeDtypeStruct((v, n), jnp.float32),
+        interpret=interpret,
+    )(a, b, maps)
+
+
+def fp32_multiply_stacked_kernel(a, b, scheme_maps, *,
+                                 variant_block: int = DEFAULT_VARIANT_BLOCK,
+                                 chunk: int = DEFAULT_CHUNK,
+                                 interpret: bool = True) -> np.ndarray:
+    """(V, n) emulated products of one operand stream under V scheme maps.
+
+    a, b: float32 (n,); scheme_maps: int32 (V, 3, 48). Operands pad to the
+    chunk multiple with zeros and the variant axis pads by repeating map 0
+    (a valid compressor config); both pads are cropped from the result.
+    Returns np.float32 (V, n).
+    """
+    a = np.asarray(a, np.float32).ravel()
+    b = np.asarray(b, np.float32).ravel()
+    maps = np.asarray(scheme_maps, np.int32)
+    v, n = maps.shape[0], a.size
+    gv = min(variant_block, max(v, 1))
+    ck = min(chunk, max(n, 1))
+    if n == 0 or v == 0:
+        return np.zeros((v, n), np.float32)
+    pad_n = (-n) % ck
+    pad_v = (-v) % gv
+    if pad_n:
+        a = np.concatenate([a, np.zeros(pad_n, np.float32)])
+        b = np.concatenate([b, np.zeros(pad_n, np.float32)])
+    if pad_v:
+        maps = np.concatenate([maps, np.repeat(maps[:1], pad_v, axis=0)])
+    out = _stacked_jit(jnp.asarray(a), jnp.asarray(b), jnp.asarray(maps),
+                       variant_block=gv, chunk=ck, interpret=interpret)
+    return np.asarray(out)[:v, :n]

@@ -1,5 +1,5 @@
 """Public jit'd wrappers over the Pallas kernels: padding, impl dispatch, and
-the VMEM-aware block-size chooser shared by every Pallas entry point.
+the roofline-autotuned block chooser shared by every Pallas entry point.
 
 These are the kernel-level primitives the AM engine (core/engine.py)
 dispatches to; call them directly only when you need explicit control over
@@ -9,8 +9,21 @@ oracle; the surrogate path adds `impl="fused_xla"` — the same fused one-pass
 contraction expressed as a single XLA computation, the fast spelling on this
 CPU build box — and `impl="auto"` (kernel on TPU, fused_xla otherwise).
 Shapes are padded to block multiples and cropped back.
+
+Block selection (`choose_block`) is an autotuner: candidate block shapes that
+fit the VMEM budget are scored against the kernel roofline model
+(roofline/analysis.py::surrogate_block_time / bitexact_block_time) for the
+current target — TPU v5e on TPU, the 2-core ~1.2 GB/s build box otherwise —
+and the winner is memoized in a per-shape tuning cache persisted to
+artifacts/tuning_cache.json (override with $REPRO_TUNING_CACHE). Given a
+cache entry the chooser is a pure lookup, so block choices are deterministic
+across runs and across model revisions until the cache is regenerated.
 """
 from __future__ import annotations
+
+import json
+import os
+import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +32,7 @@ import numpy as np
 from repro.kernels import am_surrogate_matmul as _sgk
 from repro.kernels import approx_conv as _convk
 from repro.kernels import approx_matmul as _mmk
+from repro.kernels import bitexact_emulator as _emuk
 from repro.kernels import ref as _ref
 
 _ON_TPU = jax.default_backend() == "tpu"
@@ -30,53 +44,176 @@ BITEXACT_VMEM_BUDGET = 4 * 2**20
 
 # Bit-exact emulation's dominant temporary is the partial-product bit tensor:
 # (..., 10 rows, 48 cols) int32 per emulated multiply = 1920 B per element of
-# the block. The surrogate kernel's live set is x (bm,bk) + w/mu/sg (bk,bn)*3
-# + two (bm,bn) f32 accumulators.
+# the block. The fused surrogate kernel's live set is x (bm,bk) + folded
+# wm/wv (bk,bn)*2 + z/out/var (bm,bn)*3 f32 (the unfolded moments kernel's
+# w/mu/sg + two accumulators is the same size).
 _PPM_BYTES_PER_MUL = 10 * 48 * 4
 
 
-def _pow2_at_most(cap: int, need: int) -> int:
-    """Largest power of two <= cap, clipped down to cover `need` if smaller."""
-    p = 1 << max(cap.bit_length() - 1, 0)
-    while p > 1 and p >= 2 * need:
-        p //= 2
-    return max(p, 1)
+def _bitexact_live_bytes(bm: int, bk: int, bn: int) -> int:
+    return bm * bk * bn * _PPM_BYTES_PER_MUL
 
 
-def choose_block(kind: str, m: int, k: int, n: int, *, vmem_bytes: int | None = None):
-    """One block-size chooser for all Pallas entry points.
+def _surrogate_live_bytes(bm: int, bk: int, bn: int) -> int:
+    return (bm * bk + 3 * bk * bn + 3 * bm * bn) * 4
 
-    kind="bitexact_matmul": (bm, bk, bn) such that the PPM bit tensor
-      bm*bk*bn * 1920 B fits the bit-exact VMEM budget (default 4 MiB —
-      (8, 16, 16) -> 3.75 MiB, the hand-derived constant this replaces).
-    kind="surrogate_matmul": (bm, bk, bn) with (bm*bk + 3*bk*bn + 2*bm*bn)*4 B
-      under the v5e VMEM envelope and 128-aligned MXU dims when the problem
-      is large enough (defaults to (128, 128, 128) -> 384 KiB).
-    kind="bitexact_conv": the filter-group size FG limiting the per-tap bit
-      tensor ho*wo*cin*FG * 1920 B (m=ho*wo, k=cin, n=F here).
+
+# ---------------------------------------------------------------------------
+# Block autotuner: candidates -> roofline score -> persisted tuning cache
+# ---------------------------------------------------------------------------
+
+TUNING_CACHE_ENV = "REPRO_TUNING_CACHE"
+# Bump when candidate enumeration or the scoring model changes shape: stale
+# cache entries for old versions are ignored rather than misapplied.
+_TUNE_VERSION = 1
+
+_tuning_cache: dict[str, list] = {}
+_disk_cache_loaded = False
+
+
+def tuning_cache_path() -> pathlib.Path:
+    """$REPRO_TUNING_CACHE, else artifacts/tuning_cache.json at the repo root
+    (located by walking up from this file; falls back to the CWD for
+    installed-package layouts without a repo checkout)."""
+    env = os.environ.get(TUNING_CACHE_ENV)
+    if env:
+        return pathlib.Path(env)
+    for parent in pathlib.Path(__file__).resolve().parents:
+        if (parent / "artifacts").is_dir():
+            return parent / "artifacts" / "tuning_cache.json"
+    return pathlib.Path("artifacts") / "tuning_cache.json"
+
+
+def _load_disk_cache() -> None:
+    global _disk_cache_loaded
+    if _disk_cache_loaded:
+        return
+    _disk_cache_loaded = True
+    path = tuning_cache_path()
+    try:
+        disk = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return
+    for key, block in disk.items():
+        _tuning_cache.setdefault(key, block)
+
+
+def save_tuning_cache(path: pathlib.Path | None = None) -> pathlib.Path:
+    """Persist the in-memory tuning cache (sorted keys, stable diffs)."""
+    path = path or tuning_cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(
+        json.dumps({k: _tuning_cache[k] for k in sorted(_tuning_cache)},
+                   indent=1) + "\n")
+    return path
+
+
+def clear_tuning_cache() -> None:
+    """Drop in-memory entries and re-arm the disk load (tests)."""
+    global _disk_cache_loaded
+    _tuning_cache.clear()
+    _disk_cache_loaded = False
+
+
+def _kernel_target():
+    from repro.roofline import analysis
+
+    return analysis.TPU_V5E_KERNEL if _ON_TPU else analysis.BUILD_BOX_KERNEL
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def _pow2_range(lo: int, hi: int) -> list[int]:
+    out, p = [], lo
+    while p <= hi:
+        out.append(p)
+        p *= 2
+    return out or [lo]
+
+
+def candidate_blocks(kind: str, m: int, k: int, n: int,
+                     *, vmem_bytes: int | None = None) -> list[tuple]:
+    """Power-of-two (bm, bk, bn) candidates that fit the VMEM budget.
+
+    Dims are capped at the pow2 ceiling of the problem (no block larger than
+    the padded problem) and at the kernel's practical maxima; every returned
+    candidate satisfies the kind's live-set budget, so any of them is safe
+    to launch — the scorer only decides which is fastest.
     """
     if kind == "bitexact_matmul":
         budget = vmem_bytes or BITEXACT_VMEM_BUDGET
-        bm, bk, bn = 8, 16, 16
-        while bm * bk * bn * _PPM_BYTES_PER_MUL > budget and bm * bk * bn > 1:
-            # shrink the largest dim first
-            if bk >= bn and bk >= bm and bk > 1:
-                bk //= 2
-            elif bn >= bm and bn > 1:
-                bn //= 2
-            else:
-                bm //= 2
-        return (_pow2_at_most(bm, m), _pow2_at_most(bk, k), _pow2_at_most(bn, n))
-    if kind == "surrogate_matmul":
+        fits = _bitexact_live_bytes
+        caps = (min(_pow2_ceil(m), 32), min(_pow2_ceil(k), 64),
+                min(_pow2_ceil(n), 64))
+        lo = 1
+    elif kind == "surrogate_matmul":
         budget = vmem_bytes or VMEM_BYTES
-        bm = bk = bn = 128
-        while (bm * bk + 3 * bk * bn + 2 * bm * bn) * 4 > budget:
-            bm, bk, bn = bm // 2, bk // 2, bn // 2
-        return (
-            max(_pow2_at_most(bm, m), 8),
-            max(_pow2_at_most(bk, k), 8),
-            max(_pow2_at_most(bn, n), 8),
-        )
+        fits = _surrogate_live_bytes
+        caps = (max(_pow2_ceil(m), 8), max(_pow2_ceil(k), 8),
+                max(_pow2_ceil(n), 8))
+        caps = tuple(min(c, 512) for c in caps)
+        lo = 8
+    else:
+        raise ValueError(f"no block candidates for kind {kind!r}")
+    cands = [
+        (bm, bk, bn)
+        for bm in _pow2_range(min(lo, caps[0]), caps[0])
+        for bk in _pow2_range(min(lo, caps[1]), caps[1])
+        for bn in _pow2_range(min(lo, caps[2]), caps[2])
+        if fits(bm, bk, bn) <= budget
+    ]
+    if not cands:  # degenerate budget: smallest legal block, clipped
+        cands = [(min(lo, caps[0]), min(lo, caps[1]), min(lo, caps[2]))]
+    return cands
+
+
+def score_block(kind: str, block, m: int, k: int, n: int) -> float:
+    """Modeled seconds for one candidate on the current kernel target."""
+    from repro.roofline import analysis
+
+    target = _kernel_target()
+    if kind == "bitexact_matmul":
+        return analysis.bitexact_block_time(
+            m, k, n, block, target, ppm_bytes_per_mul=_PPM_BYTES_PER_MUL)
+    if kind == "surrogate_matmul":
+        return analysis.surrogate_block_time(m, k, n, block, target)
+    raise ValueError(f"no block model for kind {kind!r}")
+
+
+def autotune_block(kind: str, m: int, k: int, n: int,
+                   *, vmem_bytes: int | None = None) -> tuple:
+    """Pure argmin over candidate_blocks under score_block (no cache I/O).
+
+    Ties break toward the larger block, then the larger bn/bk — a total,
+    deterministic order, so equal scores cannot flap between runs.
+    """
+    cands = candidate_blocks(kind, m, k, n, vmem_bytes=vmem_bytes)
+    return min(
+        cands,
+        key=lambda b: (score_block(kind, b, m, k, n),
+                       -b[0] * b[1] * b[2], -b[2], -b[1]),
+    )
+
+
+def choose_block(kind: str, m: int, k: int, n: int, *, vmem_bytes: int | None = None):
+    """One block chooser for all Pallas entry points (autotuned + cached).
+
+    kind="bitexact_matmul": (bm, bk, bn) whose PPM bit tensor
+      bm*bk*bn * 1920 B fits the bit-exact VMEM budget (default 4 MiB).
+    kind="surrogate_matmul": (bm, bk, bn) whose fused-kernel live set
+      (bm*bk + 3*bk*bn + 3*bm*bn) * 4 B fits the v5e VMEM envelope.
+    kind="bitexact_conv": the filter-group size FG limiting the per-tap bit
+      tensor ho*wo*cin*FG * 1920 B (m=ho*wo, k=cin, n=F here) — analytic,
+      a scalar maximization, not worth a tuning-cache entry.
+
+    Matmul kinds consult the tuning cache first (in-memory, seeded from
+    artifacts/tuning_cache.json / $REPRO_TUNING_CACHE); on a miss the
+    roofline autotuner runs and the result is recorded and best-effort
+    persisted, so later runs — and CI, which checks the cache in — are pure
+    lookups.
+    """
     if kind == "bitexact_conv":
         # The per-tap bit tensor streams through the pipeline in stages, so
         # the live set is a fraction of the full (m*k*FG) PPM tensor; the
@@ -85,7 +222,21 @@ def choose_block(kind: str, m: int, k: int, n: int, *, vmem_bytes: int | None = 
         budget = vmem_bytes or (20 * 2**20)
         per_filter = max(m * k, 1) * _PPM_BYTES_PER_MUL
         return max(1, min(n, budget // per_filter))
-    raise ValueError(f"unknown block kind {kind!r}")
+    if kind not in ("bitexact_matmul", "surrogate_matmul"):
+        raise ValueError(f"unknown block kind {kind!r}")
+    key = (f"v{_TUNE_VERSION}:{_kernel_target().name}:{kind}:"
+           f"{m}x{k}x{n}:{vmem_bytes or 0}")
+    _load_disk_cache()
+    hit = _tuning_cache.get(key)
+    if hit is not None:
+        return tuple(int(b) for b in hit)
+    block = autotune_block(kind, m, k, n, vmem_bytes=vmem_bytes)
+    _tuning_cache[key] = [int(b) for b in block]
+    try:
+        save_tuning_cache()
+    except OSError:  # read-only checkout: stay in-memory
+        pass
+    return block
 
 
 def _pad_to(x, mults, axes):
@@ -96,6 +247,11 @@ def _pad_to(x, mults, axes):
     if any(p != (0, 0) for p in pads):
         x = jnp.pad(x, pads)
     return x
+
+
+# ---------------------------------------------------------------------------
+# Surrogate matmul: moments, folded moments, fused noise epilogue
+# ---------------------------------------------------------------------------
 
 
 def am_surrogate_moments(x, w, mu, sg, *, block=None, impl="auto"):
@@ -127,6 +283,89 @@ def _fused_xla_moments(x, w, mu, sg):
     return _ref.am_surrogate_matmul_ref(x, w, mu, sg)
 
 
+def _stacked_moments(x, w_mean, w_var):
+    """Both contractions of the surrogate (mean, var) pair. The two plain
+    dots are bitwise identical to the stacked batched-einsum spelling (the
+    dot order per output element is unchanged either way) and measure
+    slightly faster on the build box — the batched GEMM walks the pair in
+    one backend call but pays an extra (2, M, K) stack materialization."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.dot(xf, w_mean, preferred_element_type=jnp.float32)
+    var = jnp.dot(xf * xf, w_var, preferred_element_type=jnp.float32)
+    return mean, var
+
+
+def am_surrogate_moments_folded(x, w_mean, w_var, *, block=None, impl="auto"):
+    """(mean, var) from pre-folded weights w_mean = w(1+mu), w_var = w^2 sg^2.
+
+    The engine's surrogate_fused backend folds the per-slot moment maps into
+    the weights once (host-side for concrete weights) and calls this — or
+    the epilogue below — per step. Returns (mean (M, N), var (M, N)) f32.
+    """
+    m, k = x.shape
+    n = w_mean.shape[-1]
+    if impl == "auto":
+        impl = "kernel" if _ON_TPU else "fused_xla"
+    if impl in ("ref", "fused_xla"):
+        return _stacked_moments(x, w_mean, w_var)
+    block = block or choose_block("surrogate_matmul", m, k, n)
+    bm, bk, bn = block
+    xp = _pad_to(x, (bm, bk), (0, 1))
+    wmp = _pad_to(w_mean, (bk, bn), (0, 1))
+    wvp = _pad_to(w_var, (bk, bn), (0, 1))
+    mean, var = _sgk.am_surrogate_matmul_folded_kernel(
+        xp, wmp, wvp, block=(bm, bk, bn), interpret=not _ON_TPU
+    )
+    return mean[:m, :n], var[:m, :n]
+
+
+def am_surrogate_matmul_epilogue(x, w_mean, w_var, z, *, block=None,
+                                 impl="auto"):
+    """Noise-complete surrogate matmul with the CRN draw fused as a GEMM
+    epilogue: out = x @ w_mean + z * sqrt(max((x*x) @ w_var, 0)).
+
+    z is the caller's CRN noise tile — (M, N), already drawn from the global
+    call key and the single-genome output shape (core/engine.py invariant) —
+    so this function stays deterministic and oracle-comparable.
+
+    Shapes: x (M, K) or (P, M, K); w_mean/w_var (K, N) or (P, K, N); z (M, N)
+    shared across P. Output gains the population axis iff the weights carry
+    one. impl="fused_xla" is bitwise identical to the surrogate_xla op
+    sequence (separate dots + elementwise epilogue); impl="kernel" fuses the
+    epilogue into the last k-step of the Pallas grid (blocked-k accumulation
+    order, allclose to the oracle).
+    """
+    pop = w_mean.ndim == 3
+    pop_x = x.ndim == 3
+    if impl == "auto":
+        impl = "kernel" if _ON_TPU else "fused_xla"
+    if impl in ("ref", "fused_xla"):
+        xf = x.astype(jnp.float32)
+        if not pop:
+            mean, var = _stacked_moments(xf, w_mean, w_var)
+        elif pop_x:
+            mean = jnp.einsum("pmk,pkn->pmn", xf, w_mean)
+            var = jnp.einsum("pmk,pkn->pmn", xf * xf, w_var)
+        else:
+            mean = jnp.einsum("mk,pkn->pmn", xf, w_mean)
+            var = jnp.einsum("mk,pkn->pmn", xf * xf, w_var)
+        zb = z if not pop else z[None]
+        return mean + zb * jnp.sqrt(jnp.maximum(var, 0.0))
+
+    m, k = x.shape[-2:]
+    n = w_mean.shape[-1]
+    block = block or choose_block("surrogate_matmul", m, k, n)
+    bm, bk, bn = block
+    xp = _pad_to(x, (bm, bk), (x.ndim - 2, x.ndim - 1))
+    wmp = _pad_to(w_mean, (bk, bn), (w_mean.ndim - 2, w_mean.ndim - 1))
+    wvp = _pad_to(w_var, (bk, bn), (w_var.ndim - 2, w_var.ndim - 1))
+    zp = _pad_to(z, (bm, bn), (0, 1))
+    out = _sgk.am_surrogate_matmul_epilogue_kernel(
+        xp, wmp, wvp, zp, block=(bm, bk, bn), interpret=not _ON_TPU
+    )
+    return out[..., :m, :n]
+
+
 def am_surrogate_matmul(x, w, mu, sg, key, *, block=None, impl="kernel"):
     """Noise-complete statistical AM matmul: mean + z*sqrt(var)."""
     if impl == "ref":
@@ -135,6 +374,11 @@ def am_surrogate_matmul(x, w, mu, sg, key, *, block=None, impl="kernel"):
         mean, var = am_surrogate_moments(x, w, mu, sg, block=block, impl=impl)
     z = jax.random.normal(key, mean.shape, mean.dtype)
     return mean + z * jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact entry points
+# ---------------------------------------------------------------------------
 
 
 def am_matmul_bitexact(x, w, variant_ids, *, block=None, impl="kernel"):
@@ -167,3 +411,45 @@ def am_conv2d_bitexact(x, w, slot_map, *, impl="kernel", batch_block=1,
         x, w, slot_map, batch_block=batch_block, filter_group=fg,
         interpret=not _ON_TPU,
     )
+
+
+def fp32_multiply_stacked(a, b, scheme_maps, *, chunk: int | None = None,
+                          impl="auto"):
+    """Emulate (V, n) products of one operand stream under V scheme maps.
+
+    The batched bit-exact emulator: the Booth partial-product generation
+    (the expensive, variant-independent half of the emulation) is computed
+    once per operand chunk and broadcast against the V compressor-code maps,
+    so characterizing V variants costs far less than V scalar sweeps
+    (foundry.characterize_batch's amortization, packaged as a kernel op).
+
+    a, b: float32 (n,) host or device arrays; scheme_maps: (V, 3, 48) int32.
+    impl: "fused_xla" (one jitted broadcast emulation per chunk — the build
+    box spelling, bit-identical to per-variant fp32_multiply_batch) |
+    "kernel" (Pallas grid over (variant block, operand chunk), interpret off
+    TPU) | "auto". Returns np.float32 (V, n).
+    """
+    a = np.asarray(a, np.float32).ravel()
+    b = np.asarray(b, np.float32).ravel()
+    maps = np.asarray(scheme_maps, np.int32)
+    if maps.ndim != 3 or maps.shape[1:] != (3, 48):
+        raise ValueError(f"scheme_maps must be (V, 3, 48), got {maps.shape}")
+    if impl == "auto":
+        impl = "kernel" if _ON_TPU else "fused_xla"
+    if chunk is None:
+        chunk = max(1 << 10, (1 << 15) // max(maps.shape[0], 1))
+    if impl == "kernel":
+        return _emuk.fp32_multiply_stacked_kernel(
+            a, b, maps, chunk=chunk, interpret=not _ON_TPU)
+    if impl != "fused_xla":
+        raise ValueError(f"unknown impl {impl!r}")
+    from repro.core import fp32_mul
+
+    codes = jnp.asarray(maps)[:, None]  # (V, 1, 3, 48)
+    outs = []
+    for i in range(0, a.size, chunk):
+        outs.append(np.asarray(fp32_mul._fp32_multiply_jit(
+            a[i : i + chunk][None], b[i : i + chunk][None], codes
+        )))
+    return np.concatenate(outs, axis=1) if outs else np.zeros(
+        (maps.shape[0], 0), np.float32)

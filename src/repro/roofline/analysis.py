@@ -32,6 +32,103 @@ HBM_BW = 819e9  # B/s / chip
 ICI_BW = 50e9  # B/s / link
 
 
+# ---------------------------------------------------------------------------
+# Kernel block-time model (the autotuner's scoring function)
+# ---------------------------------------------------------------------------
+#
+# kernels/ops.py::choose_block ranks candidate Pallas block shapes with the
+# same three-term roofline used for whole programs, specialized to one grid
+# program: compute = block FLOPs / (peak x matrix-unit utilization), memory =
+# per-program tile traffic / sustained bandwidth, plus a fixed per-program
+# dispatch overhead that penalizes over-fine grids. The model only has to
+# RANK blocks consistently — absolute seconds are not calibrated — so the
+# constants below are order-of-magnitude targets, and the chosen block is
+# persisted in a tuning cache keyed by (kind, shape, target).
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTarget:
+    """Scoring target for the block autotuner.
+
+    peak_flops/mem_bw set the roofline; align is the matrix-unit tile edge
+    (blocks smaller than it underutilize the unit); launch_overhead is the
+    per-grid-program dispatch cost that penalizes tiny blocks.
+    """
+
+    name: str
+    peak_flops: float  # f32 FLOP/s
+    mem_bw: float  # B/s, sustained
+    align: int
+    launch_overhead: float  # seconds per grid program
+
+
+# TPU v5e per-core (assignment constants above; MXU is 128x128).
+TPU_V5E_KERNEL = KernelTarget("tpu_v5e", PEAK_FLOPS, HBM_BW, 128, 1e-6)
+# The 2-core ~1.2 GB/s build box: 2 cores x ~3 GHz x 8-lane FMA, with
+# cache-resident blocking the goal (hence the small align and the large
+# relative dispatch overhead of interpret-mode/XLA loop bodies).
+BUILD_BOX_KERNEL = KernelTarget("build_box_2core", 4.8e10, 1.2e9, 8, 2e-6)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _mxu_utilization(bm: int, bn: int, bk: int, align: int) -> float:
+    """Fraction of the matrix unit a (bm, bk)x(bk, bn) tile keeps busy."""
+    eff = 1.0
+    for b in (bm, bn, bk):
+        eff *= min(b, align) / align
+    return max(eff, 1e-6)
+
+
+def surrogate_block_time(m: int, k: int, n: int, block, target: KernelTarget,
+                         *, pop: int = 1) -> float:
+    """Modeled seconds for the fused surrogate (mean/var + epilogue) kernel.
+
+    Per grid program the kernel reads an x tile (bm, bk), two folded weight
+    tiles (bk, bn), and on the last k step a z tile plus the output write —
+    the channel-major blocking where outputs stay resident across the k loop.
+    """
+    bm, bk, bn = block
+    gm, gk, gn = _ceil_div(m, bm), _ceil_div(k, bk), _ceil_div(n, bn)
+    programs = pop * gm * gn * gk
+    flops = 4.0 * pop * (gm * bm) * (gk * bk) * (gn * bn)  # two MACs/element
+    x_bytes = 4.0 * programs * bm * bk
+    w_bytes = 4.0 * programs * 2 * bk * bn
+    out_bytes = 4.0 * pop * gm * gn * 3 * bm * bn  # z read + out/var write
+    t_compute = flops / (target.peak_flops
+                         * _mxu_utilization(bm, bn, bk, target.align))
+    t_memory = (x_bytes + w_bytes + out_bytes) / target.mem_bw
+    # Additive, not max(): a pure roofline max() hides the utilization
+    # penalty of degenerate tiles whenever one term dominates, which would
+    # rank (bm, 1, bn) blocks above well-shaped ones. The sum still ranks
+    # bandwidth- and compute-bound candidates consistently.
+    return t_compute + t_memory + programs * target.launch_overhead
+
+
+def bitexact_block_time(m: int, k: int, n: int, block, target: KernelTarget,
+                        *, ppm_bytes_per_mul: int = 1920) -> float:
+    """Modeled seconds for the bit-exact emulation kernel.
+
+    Dominated by the partial-product bit tensor (ppm_bytes_per_mul per
+    emulated multiply) streaming through the memory system, with the same
+    tile-traffic and per-program terms as the surrogate model; the ~600
+    int-ops per multiply ride the same ppm term (they are proportional).
+    """
+    bm, bk, bn = block
+    gm, gk, gn = _ceil_div(m, bm), _ceil_div(k, bk), _ceil_div(n, bn)
+    programs = gm * gn * gk
+    muls = float(programs) * bm * bk * bn
+    ppm_bytes = muls * ppm_bytes_per_mul
+    x_bytes = 4.0 * programs * bm * bk
+    w_bytes = 4.0 * programs * 2 * bk * bn  # w + variant ids
+    t_memory = (ppm_bytes + x_bytes + w_bytes) / target.mem_bw
+    t_compute = 600.0 * muls / (target.peak_flops
+                                * _mxu_utilization(bm, bn, bk, target.align))
+    return t_compute + t_memory + programs * target.launch_overhead
+
+
 @dataclasses.dataclass
 class Roofline:
     arch: str

@@ -1,0 +1,120 @@
+"""Unit tests for the CI benchmark-regression gate (benchmarks/check_regression).
+
+Pure-JSON fixtures in tmp dirs; no benchmarks are run. Pins the gate's
+contract: tolerance bands per direction, fail-on-missing-fresh,
+skip-on-missing-baseline, the acceptance ceiling checked on the COMMITTED
+baseline, and --update adopting a fresh run (including the cross-file graft
+for the sharded-search metric).
+"""
+import json
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+
+def _write(d, name, doc):
+    (d / name).write_text(json.dumps(doc))
+
+
+RULE_LOWER = cr.Rule("m.json", "a.ratio", "lower", tol=0.25)
+RULE_HIGHER = cr.Rule("m.json", "a.rate", "higher", tol=0.25)
+
+
+def test_within_band_passes(tmp_path):
+    f, b = tmp_path / "f", tmp_path / "b"
+    f.mkdir(), b.mkdir()
+    _write(b, "m.json", {"a": {"ratio": 2.0, "rate": 100.0}})
+    _write(f, "m.json", {"a": {"ratio": 2.4, "rate": 80.0}})  # both at band
+    assert cr.check(f, b, rules=(RULE_LOWER, RULE_HIGHER)) == []
+
+
+def test_lower_metric_regression_fails(tmp_path):
+    f, b = tmp_path / "f", tmp_path / "b"
+    f.mkdir(), b.mkdir()
+    _write(b, "m.json", {"a": {"ratio": 2.0}})
+    _write(f, "m.json", {"a": {"ratio": 2.6}})  # > 2.0 * 1.25
+    fails = cr.check(f, b, rules=(RULE_LOWER,))
+    assert len(fails) == 1 and "a.ratio" in fails[0]
+
+
+def test_higher_metric_regression_fails(tmp_path):
+    f, b = tmp_path / "f", tmp_path / "b"
+    f.mkdir(), b.mkdir()
+    _write(b, "m.json", {"a": {"rate": 100.0}})
+    _write(f, "m.json", {"a": {"rate": 70.0}})  # < 100 * 0.75
+    assert len(cr.check(f, b, rules=(RULE_HIGHER,))) == 1
+
+
+def test_missing_fresh_metric_fails(tmp_path):
+    f, b = tmp_path / "f", tmp_path / "b"
+    f.mkdir(), b.mkdir()
+    _write(b, "m.json", {"a": {"ratio": 2.0}})
+    _write(f, "m.json", {"a": {}})  # metric lost from the smoke run
+    fails = cr.check(f, b, rules=(RULE_LOWER,))
+    assert len(fails) == 1 and "missing from fresh" in fails[0]
+    # ... and a missing fresh FILE fails identically
+    (f / "m.json").unlink()
+    assert len(cr.check(f, b, rules=(RULE_LOWER,))) == 1
+
+
+def test_missing_baseline_skips_with_warning(tmp_path, capsys):
+    f, b = tmp_path / "f", tmp_path / "b"
+    f.mkdir(), b.mkdir()
+    _write(f, "m.json", {"a": {"ratio": 99.0}})
+    assert cr.check(f, b, rules=(RULE_LOWER,)) == []
+    assert "SKIP" in capsys.readouterr().out
+
+
+def test_baseline_ceiling_checked_on_committed_value(tmp_path):
+    rule = cr.Rule("m.json", "a.ratio", "lower", tol=0.25,
+                   baseline_ceiling=2.0)
+    f, b = tmp_path / "f", tmp_path / "b"
+    f.mkdir(), b.mkdir()
+    # Baseline violates the acceptance bound -> fail even though fresh is
+    # within band of it.
+    _write(b, "m.json", {"a": {"ratio": 2.5}})
+    _write(f, "m.json", {"a": {"ratio": 2.4}})
+    fails = cr.check(f, b, rules=(rule,))
+    assert len(fails) == 1 and "acceptance bound" in fails[0]
+    # Compliant baseline: a noisy-but-in-band fresh value still passes.
+    _write(b, "m.json", {"a": {"ratio": 1.9}})
+    _write(f, "m.json", {"a": {"ratio": 2.3}})
+    assert cr.check(f, b, rules=(rule,)) == []
+
+
+def test_update_adopts_fresh_and_grafts_cross_file(tmp_path):
+    rules = (
+        cr.Rule("m.json", "a.ratio", "lower"),
+        cr.Rule("sharded.json", "speedup", "higher",
+                baseline_file="nested.json", baseline_path="shard.speedup"),
+    )
+    f, b = tmp_path / "f", tmp_path / "b"
+    f.mkdir(), b.mkdir()
+    _write(f, "m.json", {"a": {"ratio": 1.5}})
+    _write(f, "sharded.json", {"speedup": 1.4})
+    _write(b, "m.json", {"a": {"ratio": 9.9}})
+    _write(b, "nested.json", {"shard": {"speedup": 9.9}, "other": 1})
+    cr.update(f, b, rules=rules)
+    assert json.loads((b / "m.json").read_text()) == {"a": {"ratio": 1.5}}
+    nested = json.loads((b / "nested.json").read_text())
+    assert nested["shard"]["speedup"] == 1.4 and nested["other"] == 1
+    # post-update, the gate passes on the adopted baselines
+    assert cr.check(f, b, rules=rules) == []
+
+
+def test_cli_exit_codes(tmp_path):
+    f, b = tmp_path / "f", tmp_path / "b"
+    f.mkdir(), b.mkdir()
+    _write(b, "BENCH_engine.json",
+           {"matmul_relative_cost": {"surrogate_fused": 3.0}})
+    _write(f, "BENCH_engine.json",
+           {"matmul_relative_cost": {"surrogate_fused": 3.0}})
+    rc = cr.main(["--fresh", str(f), "--baseline", str(b)])
+    assert rc == 1  # ceiling violated on the committed baseline
+    _write(b, "BENCH_engine.json",
+           {"matmul_relative_cost": {"surrogate_fused": 1.8}})
+    _write(f, "BENCH_engine.json",
+           {"matmul_relative_cost": {"surrogate_fused": 1.9}})
+    # Remaining rules have no baselines in b -> skip; gate passes.
+    assert cr.main(["--fresh", str(f), "--baseline", str(b)]) == 0

@@ -1,0 +1,91 @@
+"""Batched bit-exact emulator vs the scalar per-variant oracle.
+
+The stacked sweep (kernels/ops.py fp32_multiply_stacked, both the chunked
+broadcast-jit spelling and the Pallas grid) amortizes the Booth
+partial-product generation across variants; these tests pin that the
+amortization never changes a single output bit — per variant against
+`fp32_mul.fp32_multiply_batch` on fresh operands, and against the committed
+golden elementwise fixtures (the same ones tests/test_golden_bitexact.py
+gates the scalar path with).
+"""
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import fp32_mul, schemes
+from repro.kernels import ops
+
+GOLDEN = (pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+          / "golden_bitexact.npz")
+
+ALL_VARIANTS = ("exact",) + tuple(schemes.AM_SEED_VARIANTS)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if not GOLDEN.exists():
+        pytest.fail(f"missing committed fixture {GOLDEN}; regenerate with "
+                    "PYTHONPATH=src python -m benchmarks.make_golden_bitexact")
+    return np.load(GOLDEN)
+
+
+def _bit_equal(got, want):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    return got.shape == want.shape and bool(
+        (got.view(np.uint32) == want.view(np.uint32)).all())
+
+
+def _maps(names):
+    return np.stack([schemes.scheme_map(v) for v in names])
+
+
+def test_stacked_matches_golden_elementwise(golden):
+    a, b = golden["a_el"], golden["b_el"]
+    out = ops.fp32_multiply_stacked(a, b, _maps(ALL_VARIANTS))
+    for i, v in enumerate(ALL_VARIANTS):
+        assert _bit_equal(out[i], golden[f"{v}__elementwise"]), v
+
+
+def test_stacked_matches_scalar_oracle():
+    rng = np.random.default_rng(11)
+    a = rng.standard_normal(3000).astype(np.float32)
+    b = rng.standard_normal(3000).astype(np.float32)
+    maps = _maps(schemes.AM_SEED_VARIANTS)
+    out = ops.fp32_multiply_stacked(a, b, maps)
+    for i, v in enumerate(schemes.AM_SEED_VARIANTS):
+        want = fp32_mul.fp32_multiply_batch(a, b, v)
+        assert _bit_equal(out[i], want), v
+
+
+def test_kernel_impl_bit_equal_to_fused_xla(golden):
+    # Pallas grid spelling (interpret mode on host) vs the broadcast jit,
+    # including both pads: V=9 is not a multiple of the variant block and
+    # 64 operands are not a multiple of the chunk.
+    a, b = golden["a_el"], golden["b_el"]
+    maps = _maps(ALL_VARIANTS)
+    yk = ops.fp32_multiply_stacked(a, b, maps, chunk=32, impl="kernel")
+    yx = ops.fp32_multiply_stacked(a, b, maps, chunk=32, impl="fused_xla")
+    assert _bit_equal(yk, yx)
+    for i, v in enumerate(ALL_VARIANTS):
+        assert _bit_equal(yk[i], golden[f"{v}__elementwise"]), v
+
+
+def test_stacked_chunking_invariant():
+    # Chunk size is a scheduling choice, never a numerics choice.
+    rng = np.random.default_rng(5)
+    a = rng.standard_normal(1000).astype(np.float32)
+    b = rng.standard_normal(1000).astype(np.float32)
+    maps = _maps(schemes.AM_SEED_VARIANTS[:3])
+    base = ops.fp32_multiply_stacked(a, b, maps, chunk=1000)
+    for chunk in (64, 333, 4096):
+        assert _bit_equal(ops.fp32_multiply_stacked(a, b, maps, chunk=chunk),
+                          base), chunk
+
+
+def test_stacked_rejects_bad_maps():
+    with pytest.raises(ValueError, match=r"\(V, 3, 48\)"):
+        ops.fp32_multiply_stacked(
+            np.ones(4, np.float32), np.ones(4, np.float32),
+            np.zeros((3, 48), np.int32))

@@ -5,6 +5,8 @@ bit-equal for the bitexact_* backends, calibrated mean/var for the
 surrogate_* backends — and population-axis calls must match the
 corresponding per-genome calls.
 """
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -105,6 +107,81 @@ def test_matmul_surrogate_requires_key(mm):
     x, w, vids = mm
     with pytest.raises(ValueError, match="PRNG key"):
         engine.am_matmul(x, w, vids, backend="surrogate_xla")
+
+
+# ---------------------------------------------------------------------------
+# surrogate_fused == surrogate_xla, bitwise, under CRN
+# ---------------------------------------------------------------------------
+#
+# The fused backend folds the moment maps into the weights once and runs the
+# vectorized (population-batched) formulation with the CRN draw applied as a
+# GEMM epilogue. Folding and batching reorder NOTHING per output element, so
+# the result must match the per-genome surrogate_xla op sequence bit for
+# bit — including the shared-z CRN invariant across the population axis.
+
+
+def _mm_pop(rng_seed=13, p=4):
+    rng = np.random.default_rng(rng_seed)
+    x = jnp.asarray(rng.standard_normal((6, 10)).astype(np.float32))
+    xp = jnp.asarray(rng.standard_normal((p, 6, 10)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((10, 9)).astype(np.float32))
+    pvids = rng.integers(0, 9, (p, 10, 9)).astype(np.int32)
+    return x, xp, w, pvids
+
+
+def test_fused_matmul_bitwise_parity_single(mm):
+    x, w, vids = mm
+    a = engine.am_matmul(x, w, vids, backend="surrogate_xla", key=KEY)
+    b = engine.am_matmul(x, w, vids, backend="surrogate_fused", key=KEY)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_matmul_bitwise_parity_population():
+    x, xp, w, pvids = _mm_pop()
+    a = engine.am_matmul(x, w, pvids, backend="surrogate_xla", key=KEY)
+    b = engine.am_matmul(x, w, pvids, backend="surrogate_fused", key=KEY)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # population x: one activation slab per genome
+    a = engine.am_matmul(xp, w, pvids, backend="surrogate_xla", key=KEY)
+    b = engine.am_matmul(xp, w, pvids, backend="surrogate_fused", key=KEY)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_matmul_bitwise_parity_moments():
+    x, _, w, pvids = _mm_pop()
+    ma, va = engine.am_matmul(x, w, pvids, backend="surrogate_xla", key=KEY,
+                              return_moments=True)
+    mb, vb = engine.am_matmul(x, w, pvids, backend="surrogate_fused", key=KEY,
+                              return_moments=True)
+    np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb))
+    np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+
+def test_fused_matmul_crn_shared_across_population():
+    """z is a function of (key, single-genome output shape) ONLY: an
+    all-exact genome inside a population reproduces the single-map call."""
+    x, _, w, pvids = _mm_pop()
+    pvids = np.asarray(pvids).copy()
+    pvids[2] = 0  # genome 2 carries the all-exact map
+    for backend in ("surrogate_xla", "surrogate_fused"):
+        pop = engine.am_matmul(x, w, pvids, backend=backend, key=KEY)
+        one = engine.am_matmul(x, w, np.zeros_like(pvids[2]),
+                               backend=backend, key=KEY)
+        np.testing.assert_array_equal(np.asarray(pop)[2], np.asarray(one))
+
+
+def test_fold_matmul_weights_matches_xla_arithmetic():
+    """Host-side folding uses exactly the surrogate_xla transform:
+    w*(1+mu) and (w*w)*(sg*sg), elementwise f32."""
+    _, _, w, pvids = _mm_pop()
+    wm, wv = engine.fold_matmul_weights(
+        w, engine.CanonicalMap(np.asarray(pvids), True))
+    mu, sg = engine.moment_maps(np.asarray(pvids))
+    wf = np.asarray(w, np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(wm), (wf[None] * (1.0 + mu)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(wv), ((wf * wf)[None] * (sg * sg)).astype(np.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -277,23 +354,53 @@ def test_auto_selector(mm):
 
 
 def test_block_chooser_budgets():
-    bm, bk, bn = ops.choose_block("bitexact_matmul", 1024, 1024, 1024)
-    assert (bm, bk, bn) == (8, 16, 16)  # the hand-derived constant, recovered
-    assert bm * bk * bn * 1920 <= ops.BITEXACT_VMEM_BUDGET
+    # Every autotuner candidate — hence the chosen block — fits the kernel's
+    # VMEM budget; divisibility of padded dims holds by construction (pow2
+    # candidates over pow2-padded dims).
+    for kind, m, k, n, fits in [
+        ("bitexact_matmul", 1024, 1024, 1024,
+         lambda b: b[0] * b[1] * b[2] * 1920 <= ops.BITEXACT_VMEM_BUDGET),
+        ("surrogate_matmul", 512, 512, 512,
+         lambda b: (b[0] * b[1] + 3 * b[1] * b[2] + 3 * b[0] * b[2]) * 4
+         <= ops.VMEM_BYTES),
+    ]:
+        cands = ops.candidate_blocks(kind, m, k, n)
+        assert cands and all(fits(b) for b in cands)
+        assert ops.choose_block(kind, m, k, n) in cands
     # tighter budget shrinks the block
+    big = ops.choose_block("bitexact_matmul", 1024, 1024, 1024)
     sm = ops.choose_block("bitexact_matmul", 1024, 1024, 1024,
                           vmem_bytes=1 << 20)
-    assert np.prod(sm) * 1920 <= 1 << 20 and np.prod(sm) < bm * bk * bn
-    # surrogate default recovers the 128^3 MXU-aligned block
-    assert ops.choose_block("surrogate_matmul", 512, 512, 512) == (128, 128, 128)
+    assert np.prod(sm) * 1920 <= 1 << 20 and np.prod(sm) < np.prod(big)
     bm, bk, bn = ops.choose_block("surrogate_matmul", 512, 512, 512,
                                   vmem_bytes=96 * 1024)
-    assert (bm * bk + 3 * bk * bn + 2 * bm * bn) * 4 <= 96 * 1024
+    assert (bm * bk + 3 * bk * bn + 3 * bm * bn) * 4 <= 96 * 1024
     # conv filter grouping: paper CNN layer 2 -> the hand-derived FG=4
     assert ops.choose_block("bitexact_conv", 900, 3, 12) == 4
     # blocks never exceed (the pow2 ceiling of) the problem dims
     bm, bk, bn = ops.choose_block("surrogate_matmul", 5, 12, 7)
     assert bm <= 8 and bk <= 16 and bn <= 8
+
+
+def test_block_chooser_cache_deterministic(tmp_path, monkeypatch):
+    """choose_block is a pure function of (kind, shape, budget) and its
+    decisions round-trip through the on-disk tuning cache."""
+    cache = tmp_path / "tuning_cache.json"
+    monkeypatch.setenv(ops.TUNING_CACHE_ENV, str(cache))
+    ops.clear_tuning_cache()
+    try:
+        first = ops.choose_block("surrogate_matmul", 300, 200, 100)
+        assert cache.exists()  # autosaved on the miss
+        entry = json.loads(cache.read_text())
+        assert list(first) in list(entry.values())
+        # A cold chooser (fresh in-memory cache) must reload the same
+        # decision from disk, and re-tuning must agree with it.
+        ops.clear_tuning_cache()
+        assert ops.choose_block("surrogate_matmul", 300, 200, 100) == first
+        assert ops.autotune_block("surrogate_matmul", 300, 200, 100) == first
+    finally:
+        monkeypatch.delenv(ops.TUNING_CACHE_ENV)
+        ops.clear_tuning_cache()
 
 
 def test_bitexact_return_moments_is_point_distribution(mm, cv):

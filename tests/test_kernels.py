@@ -80,6 +80,53 @@ def test_surrogate_matmul_kernel_nonaligned(rng):
                                atol=1e-4)
 
 
+def test_surrogate_folded_kernel_vs_formulation(rng):
+    """The folded-weight Pallas kernel vs the plain-dot formulation: same
+    contraction, blocked-k accumulation order."""
+    m, k, n = 64, 96, 64
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    wm = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    wv = jnp.asarray((rng.standard_normal((k, n)) ** 2).astype(np.float32))
+    mean_k, var_k = ops.am_surrogate_moments_folded(
+        x, wm, wv, block=(32, 32, 32), impl="kernel")
+    mean_r, var_r = ops.am_surrogate_moments_folded(x, wm, wv, impl="ref")
+    np.testing.assert_allclose(np.asarray(mean_k), np.asarray(mean_r),
+                               rtol=2e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(var_k), np.asarray(var_r),
+                               rtol=2e-5, atol=1e-3)
+
+
+def test_surrogate_epilogue_kernel_single(rng):
+    m, k, n = 48, 64, 32
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    wm = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    wv = jnp.asarray((rng.standard_normal((k, n)) ** 2).astype(np.float32))
+    z = jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+    got = ops.am_surrogate_matmul_epilogue(
+        x, wm, wv, z, block=(16, 16, 16), impl="kernel")
+    want = ops.am_surrogate_matmul_epilogue(x, wm, wv, z, impl="fused_xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("pop_x", [False, True])
+def test_surrogate_epilogue_kernel_population(rng, pop_x):
+    """Population grid: per-genome folded weights, ONE z tile shared across
+    the population axis (the engine's CRN invariant), non-aligned dims pad."""
+    p, m, k, n = 3, 20, 40, 24
+    xs = (p, m, k) if pop_x else (m, k)
+    x = jnp.asarray(rng.standard_normal(xs).astype(np.float32))
+    wm = jnp.asarray(rng.standard_normal((p, k, n)).astype(np.float32))
+    wv = jnp.asarray((rng.standard_normal((p, k, n)) ** 2).astype(np.float32))
+    z = jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+    got = ops.am_surrogate_matmul_epilogue(
+        x, wm, wv, z, block=(16, 16, 16), impl="kernel")
+    want = ops.am_surrogate_matmul_epilogue(x, wm, wv, z, impl="fused_xla")
+    assert got.shape == (p, m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-3)
+
+
 @pytest.mark.slow
 def test_surrogate_moments_match_bitexact_statistics(rng):
     """Calibration: the surrogate's (mu, sigma) must reproduce the bit-exact
