@@ -79,6 +79,14 @@ RULES: tuple[Rule, ...] = (
     Rule("BENCH_engine.json", "emulator.speedup", "higher"),
     Rule("BENCH_foundry.json", "characterize_pairs_per_sec", "higher"),
     Rule("BENCH_codesign.json", "inner_evals_per_sec", "higher"),
+    # Async island-model outer search: warm candidates/sec at 2 workers and
+    # the 2w/1w speedup. Both get the wide scheduler band — thread overlap
+    # depends on how much XLA exec (GIL-released) the box exposes, so a
+    # 1-core box commits ~parity and multi-core CI runs above it.
+    Rule("BENCH_codesign.json", "async.candidates_per_sec_2w", "higher",
+         tol=0.35),
+    Rule("BENCH_codesign.json", "async.speedup_2w_vs_1w", "higher",
+         tol=0.35),
 )
 
 

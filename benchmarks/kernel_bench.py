@@ -7,6 +7,7 @@ multiply). Prints name,us_per_call,derived CSV rows.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -470,6 +471,78 @@ def codesign_bench(
           f"{out['outer_candidates']},candidates,"
           f"cache_hit_rate={out['outer_cache_hit_rate']:.3f},"
           f"archive={out['archive_points']}")
+
+    # Async island-model outer search: warm candidates/sec at 1/2/4 workers
+    # vs the warm sequential path, plus a live 1w-vs-2w archive parity check
+    # (the replay determinism the tests gate, measured here on real tasks).
+    # The cold run above has absorbed jit compilation, so these rows time
+    # steady-state throughput. On a 1-core box thread workers add overlap
+    # only where JAX releases the GIL (XLA execution), so the committed
+    # speedup is ~parity there; multi-core CI runners see the real gain.
+    def run_async(workers: int) -> tuple[dict, dict]:
+        acfg = codesign.CodesignConfig(
+            n_specs=n_specs, outer_pop=outer_pop,
+            outer_generations=outer_generations, inner_pop=inner_pop,
+            inner_generations=inner_generations, char_n=char_n,
+            workers=workers, n_islands=2, migration_interval=2,
+            migration_k=1, async_window=2,
+        )
+        t0 = time.time()
+        r = codesign.codesign_search(
+            lambda g: ev(g, key), genome_len=cnn.N_SLOTS, cfg=acfg
+        )
+        dt = time.time() - t0
+        a = r["async"]
+        n_cand = r["stats"]["outer"]["genomes_requested"]
+        return r, {
+            "seconds": dt,
+            "candidates": n_cand,
+            "candidates_per_sec": n_cand / dt if dt else 0.0,
+            "queue_wait_fraction": a["queue_wait_fraction"],
+            "migration_wait_seconds": a["migration_wait_seconds"],
+        }
+
+    t0 = time.time()
+    codesign.codesign_search(  # warm sequential reference
+        lambda g: ev(g, key), genome_len=cnn.N_SLOTS, cfg=cfg
+    )
+    seq_sec = time.time() - t0
+    seq_cps = outer["genomes_requested"] / seq_sec if seq_sec else 0.0
+
+    run_async(2)  # the async trajectory's own warmup (characterization
+    # baselines for its wave shapes; first-eval-from-worker-thread costs)
+    runs = {w: run_async(w) for w in (1, 2, 4)}
+    r1, m1 = runs[1]
+    r2, m2 = runs[2]
+    parity = json.dumps(r1["archive"].as_dict(), sort_keys=True) == \
+        json.dumps(r2["archive"].as_dict(), sort_keys=True)
+    replay_ok = json.dumps(
+        codesign.replay_archive(r2["replay"]).as_dict(), sort_keys=True
+    ) == json.dumps(r2["archive"].as_dict(), sort_keys=True)
+    out["async"] = {
+        "n_islands": 2,
+        "sequential_seconds": seq_sec,
+        "sequential_candidates_per_sec": seq_cps,
+        **{f"workers_{w}": m for w, (_, m) in runs.items()},
+        "candidates_per_sec_2w": m2["candidates_per_sec"],
+        "speedup_2w_vs_1w": (
+            m2["candidates_per_sec"] / m1["candidates_per_sec"]
+            if m1["candidates_per_sec"] else 0.0
+        ),
+        "speedup_2w_vs_sequential": (
+            m2["candidates_per_sec"] / seq_cps if seq_cps else 0.0
+        ),
+        "parity_archive_identical": bool(parity and replay_ok),
+    }
+    for w, (_, m) in runs.items():
+        print(f"codesign_async_w{w},{m['seconds']*1e6:.1f},"
+              f"{m['candidates_per_sec']:.2f}_candidates_per_sec,"
+              f"queue_wait={m['queue_wait_fraction']:.3f},"
+              f"migration_wait={m['migration_wait_seconds']*1e3:.1f}ms")
+    print(f"codesign_async_summary,{seq_sec*1e6:.1f},"
+          f"seq={seq_cps:.2f}_candidates_per_sec,"
+          f"speedup_2w_vs_1w={out['async']['speedup_2w_vs_1w']:.2f},"
+          f"parity={out['async']['parity_archive_identical']}")
     return out
 
 

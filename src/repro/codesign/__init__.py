@@ -22,12 +22,15 @@ population evaluator and commits `artifacts/codesign_study.json`.
 from repro.codesign import genome
 from repro.codesign.archive import ArchivePoint, EliteArchive
 from repro.codesign.evolve import (
+    REPLAY_FORMAT,
     CodesignConfig,
     SpecMemo,
     codesign_search,
+    inner_seed,
     make_inner_objectives,
     novel_specs,
     reference_point,
+    replay_archive,
 )
 from repro.codesign.genome import (
     SpecParams,
@@ -44,12 +47,15 @@ from repro.codesign.genome import (
 )
 
 __all__ = [
+    "REPLAY_FORMAT",
     "ArchivePoint",
     "CodesignConfig",
     "EliteArchive",
     "SpecMemo",
     "SpecParams",
     "codesign_search",
+    "inner_seed",
+    "replay_archive",
     "crossover",
     "decode",
     "decode_specs",

@@ -16,16 +16,17 @@ Outer objectives (minimized):
   * the alphabet's library area (sum of the novel variants' predicted
     area) — the silicon cost of provisioning the multiplier library.
 
-Scale machinery, sized for the 2-core box:
-  * candidate alphabets are provisioned under `foundry.temporary_variants()`
-    and rolled back after the inner search — thousands of transient variants
-    never accumulate in the registry, and the population evaluator's jit
-    cache is keyed on GEMM shapes only, so registration churn never
-    recompiles (tests/test_foundry.py regression-pins this);
+Scale machinery, sized for the build box:
+  * candidate alphabets are provisioned under `foundry.registry_scope()` —
+    a *thread-private* registry context, so concurrent candidates hold
+    different alphabets live simultaneously and roll back independently
+    (a failed worker leaks nothing into any registry);
   * characterization + surrogate moments + hardware cost are memoized by
-    canonical spec hash (the rendered map bytes) in `SpecMemo`, and each
-    outer generation characterizes all its novel specs in ONE stacked
-    bit-level sweep (foundry.characterize_batch);
+    canonical spec hash (the rendered map bytes) in `SpecMemo` — thread
+    safe with in-flight coalescing, so two workers never pay one sweep
+    twice — and each dispatch wave characterizes every in-flight
+    candidate's novelty in ONE stacked bit-level sweep
+    (foundry.characterize_batch via the async `prepare_batch` hook);
   * outer fitness is memoized by canonical spec-*set* hash
     (genome.spec_set_key via nsga2 ``key_fn``); inner searches share one
     memo dict whose keys carry the live registry signature
@@ -33,10 +34,53 @@ Scale machinery, sized for the 2-core box:
     *different* alphabets can never alias;
   * inner evaluation stays population-batched (and optionally
     mesh-sharded) through the caller-supplied ``accuracy_batch``.
+
+Async mode and the replay log
+-----------------------------
+
+With ``CodesignConfig.workers >= 1`` the outer search runs through
+`nsga2.optimize_async`: a steady-state island-model work queue where fast
+candidates never barrier on slow ones, and the search trajectory is a pure
+function of ``(seed, config)`` — independent of worker count and completion
+order (see optimize_async's docstring for the three mechanisms). The elite
+archive is NOT fed during the run; every candidate evaluation returns its
+archive contributions in its event payload, and the archive is built at the
+end by `replay_archive` over the canonically ordered event log. The same
+function replays a saved log to a bitwise-identical archive.
+
+Replay-log format (``result["replay"]``, JSON-serializable)::
+
+    {"format": "codesign-replay-v1",
+     "seed": int, "config": {...CodesignConfig...},
+     "events": [  # completion order; exactly one per (island, phase, step)
+       {"seq": int,          # completion index (timing-dependent)
+        "island": int,
+        "phase": 0 | 1,      # 0 = initial population, 1 = steady-state
+        "step": int,         # logical index within the phase
+        "genome": [int],     # outer placement genome
+        "objectives": [float],             # [-hypervolume, library_area]
+        "cached": bool,      # served from the spec-set memo
+        "migrant": bool,     # injected by ring migration (no rng draws)
+        "t_ready"/"t_start"/"t_done": float | None,   # telemetry only
+        "payload": {
+          "alphabet_key": hex,             # spec_set_key of the candidate
+          "points": [                      # archive contributions, ordered:
+            {"objectives": [float],        #   warm sequences first, then
+             "genome": [int],              #   per-generation rank-0 fronts
+             "alphabet_key": hex,          #   in inner-search order
+             "source": "warm" | "search"}],
+          "alphabet": {...EliteArchive.add_alphabet info...},
+          "candidate_info": {...}}}]}
+
+Only ``seq`` and the ``t_*`` stamps vary with worker count; the
+``(island, phase, step) -> (genome, objectives, payload)`` mapping is
+invariant, which is what makes the replayed archive bitwise-identical.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import threading
 import time
 
 import numpy as np
@@ -45,6 +89,8 @@ from repro import foundry
 from repro.codesign import genome as cgenome
 from repro.codesign.archive import ArchivePoint, EliteArchive
 from repro.core import hwmodel, nsga2, schemes
+
+REPLAY_FORMAT = "codesign-replay-v1"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +107,26 @@ class CodesignConfig:
     char_n: int = 1 << 15  # matches the committed foundry_study run
     char_seed: int = 0
     seed: int = 0
+    # Async outer search (0 workers = legacy sequential generational path).
+    workers: int = 0
+    n_islands: int = 1
+    migration_interval: int = 2  # in steady-state steps; 0 disables
+    migration_k: int = 1
+    async_window: int = 2  # in-flight evaluations per island
+
+
+def inner_seed(base_seed: int, spec_set_key: bytes) -> int:
+    """Deterministic per-candidate inner-search seed.
+
+    Derived from the candidate's canonical spec-set hash, NOT shared across
+    candidates: seeding every inner search identically (the pre-async
+    behavior) aliased their rng streams — every candidate explored the same
+    interleaving trajectory modulo alphabet size, understating alphabet
+    differences. Keyed by spec_set_key so the seed survives genome
+    re-spellings of the same alphabet (the outer memo identity).
+    """
+    h = hashlib.blake2b(spec_set_key, digest_size=6).digest()
+    return base_seed + int.from_bytes(h, "big")
 
 
 class SpecMemo:
@@ -71,12 +137,20 @@ class SpecMemo:
     generations) never pay the bit-level sweep twice. `ensure` characterizes
     all misses of a generation in one stacked batch
     (foundry.characterize_batch), sharing a single pair of exact baselines.
+
+    Thread safe: concurrent `ensure` calls coalesce — a map being swept by
+    one worker is never re-swept by another; later callers block on the
+    in-flight sweep's completion instead. (Hit/miss counters are therefore
+    telemetry that can vary slightly with scheduling; stored values never
+    do.)
     """
 
     def __init__(self, n: int, seed: int):
         self.n = n
         self.seed = seed
         self._store: dict[bytes, tuple] = {}
+        self._lock = threading.Lock()
+        self._inflight: dict[bytes, threading.Event] = {}
         self.hits = 0
         self.misses = 0
         self.char_seconds = 0.0
@@ -85,39 +159,70 @@ class SpecMemo:
         """Characterize all misses in one stacked batch.
 
         Telemetry: each *requested occurrence* counts once — a hit if its
-        map is already stored (or queued earlier in this same call), a miss
-        otherwise — so the hit rate measures real memoization benefit
-        (specs shared across candidates/generations), not lookups of
-        entries this same call just created.
+        map is already stored (or queued earlier in this same call, or in
+        flight on another worker), a miss otherwise — so the hit rate
+        measures real memoization benefit (specs shared across candidates/
+        generations), not lookups of entries this same call just created.
         """
-        todo: dict[bytes, object] = {}
-        for s in specs:
-            kb = s.to_map().tobytes()
-            if kb in self._store or kb in todo:
-                self.hits += 1
-            else:
-                self.misses += 1
-                todo[kb] = s
-        if not todo:
-            return
-        t0 = time.time()
-        chars = foundry.characterize_batch(
-            list(todo.values()), n=self.n, seed=self.seed
-        )
-        self.char_seconds += time.time() - t0
-        for (kb, s), ch in zip(todo.items(), chars):
-            self._store[kb] = (ch, foundry.hwcost.predict(s.to_map()))
+        first = True
+        remaining = list(specs)
+        while remaining:
+            todo: dict[bytes, object] = {}
+            wait_for: list[threading.Event] = []
+            retry = []
+            with self._lock:
+                for s in remaining:
+                    kb = s.to_map().tobytes()
+                    if kb in self._store or kb in todo:
+                        if first:
+                            self.hits += 1
+                    elif kb in self._inflight:
+                        if first:
+                            self.hits += 1  # another worker's sweep covers it
+                        wait_for.append(self._inflight[kb])
+                        retry.append(s)
+                    else:
+                        if first:
+                            self.misses += 1
+                        todo[kb] = s
+                        self._inflight[kb] = threading.Event()
+            first = False
+            if todo:
+                t0 = time.time()
+                try:
+                    chars = foundry.characterize_batch(
+                        list(todo.values()), n=self.n, seed=self.seed
+                    )
+                except BaseException:
+                    with self._lock:
+                        evs = [self._inflight.pop(kb) for kb in todo]
+                    for ev in evs:  # wake waiters; they re-claim the sweep
+                        ev.set()
+                    raise
+                dt = time.time() - t0
+                with self._lock:
+                    self.char_seconds += dt
+                    evs = []
+                    for (kb, s), ch in zip(todo.items(), chars):
+                        self._store[kb] = (
+                            ch, foundry.hwcost.predict(s.to_map()))
+                        evs.append(self._inflight.pop(kb))
+                for ev in evs:
+                    ev.set()
+            for ev in wait_for:
+                ev.wait()
+            remaining = retry  # re-check: the producer may have failed
 
     def get(self, spec):
         """Uncounted lookup; self-heals (and counts a miss) if absent."""
         kb = spec.to_map().tobytes()
-        if kb not in self._store:
-            self.misses += 1
-            t0 = time.time()
-            ch = foundry.characterize_batch([spec], n=self.n, seed=self.seed)[0]
-            self.char_seconds += time.time() - t0
-            self._store[kb] = (ch, foundry.hwcost.predict(spec.to_map()))
-        return self._store[kb]
+        with self._lock:
+            hit = self._store.get(kb)
+        if hit is None:
+            self.ensure([spec])
+            with self._lock:
+                hit = self._store[kb]
+        return hit
 
     def as_dict(self) -> dict:
         return {
@@ -177,6 +282,34 @@ def make_inner_objectives(accuracy_batch):
     return objectives_batch
 
 
+def _insert_payload(archive: EliteArchive, payload: dict) -> None:
+    """Fold one candidate's archive contributions in, in payload order."""
+    for p in payload["points"]:
+        archive.insert(ArchivePoint(
+            objectives=tuple(float(x) for x in p["objectives"]),
+            genome=tuple(int(x) for x in p["genome"]),
+            alphabet_key=p["alphabet_key"],
+            source=p.get("source", "search"),
+        ))
+    archive.add_alphabet(payload["alphabet_key"], payload["alphabet"])
+
+
+def replay_archive(replay, archive: EliteArchive | None = None) -> EliteArchive:
+    """Rebuild the elite archive from an async run's replay log.
+
+    Accepts the ``result["replay"]`` dict (or a bare event list, possibly
+    JSON round-tripped) and folds every event's payload into the archive in
+    canonical ``(island, phase, step)`` order — the same procedure the live
+    async run uses, and an order independent of completion timing, so the
+    result is bitwise-identical to the live archive at any worker count.
+    """
+    archive = archive if archive is not None else EliteArchive()
+    events = replay["events"] if isinstance(replay, dict) else replay
+    for e in sorted(events, key=lambda e: (e["island"], e["phase"], e["step"])):
+        _insert_payload(archive, e["payload"])
+    return archive
+
+
 def codesign_search(
     accuracy_batch,
     *,
@@ -186,6 +319,8 @@ def codesign_search(
     archive: EliteArchive | None = None,
     mesh=None,
     pop_axis_name: str = "pop",
+    island_accuracy_batch=None,
+    island_meshes=None,
     log=None,
 ) -> dict:
     """Run the two-level search; returns outer front + elite archive.
@@ -197,19 +332,27 @@ def codesign_search(
         runtime registrations; the engine's per-call moment folding does.
       genome_len: inner sequence length (198 for the paper CNN).
       seed_candidates: optional (outer_genome, inner_warm_genomes) pairs.
-        Each outer genome joins the initial outer population; its warm
-        sequences (ids valid under the alphabet the genome induces via
-        `novel_specs` ordering) warm-start that candidate's inner search
-        and are archived directly — the path by which a previously
-        committed front (e.g. the PR-4 foundry study) is provably covered.
+        Each outer genome joins the initial outer population (island 0 in
+        async mode); its warm sequences (ids valid under the alphabet the
+        genome induces via `novel_specs` ordering) warm-start that
+        candidate's inner search and are archived directly — the path by
+        which a previously committed front (e.g. the PR-4 foundry study)
+        is provably covered.
       archive: optional pre-populated EliteArchive to accumulate into.
       mesh: optional population mesh, forwarded to the inner optimizer's
         batch padding (``accuracy_batch`` itself carries the sharded
         evaluator).
+      island_accuracy_batch: async mode only — optional per-island list of
+        accuracy evaluators (length cfg.n_islands), e.g. each bound to its
+        own mesh shard via parallel.sharding.island_meshes. Every evaluator
+        MUST be numerically identical per genome (the engine's CRN + sharded
+        parity guarantee): the outer memo is shared across islands, so one
+        island's cached result can serve another's task.
+      island_meshes: per-island meshes matching island_accuracy_batch,
+        forwarded to the inner optimizer's padding.
     """
     cfg = cfg or CodesignConfig()
     archive = archive if archive is not None else EliteArchive()
-    inner_objectives = make_inner_objectives(accuracy_batch)
     ref = reference_point(cfg.n_specs, genome_len)
     n_seed = len(schemes.SEED_VARIANTS)
 
@@ -217,7 +360,22 @@ def codesign_search(
     inner_cache: dict[bytes, np.ndarray] = {}
     inner_stats = nsga2.EvalStats()
     outer_stats = nsga2.EvalStats()
+    telemetry_lock = threading.Lock()
     candidate_info: dict[str, dict] = {}
+
+    if island_accuracy_batch is not None:
+        if len(island_accuracy_batch) != cfg.n_islands:
+            raise ValueError(
+                f"island_accuracy_batch has {len(island_accuracy_batch)} "
+                f"entries for {cfg.n_islands} islands"
+            )
+        meshes = island_meshes or [mesh] * cfg.n_islands
+        island_ctx = [
+            (make_inner_objectives(ab), m)
+            for ab, m in zip(island_accuracy_batch, meshes)
+        ]
+    else:
+        island_ctx = [(make_inner_objectives(accuracy_batch), mesh)]
 
     warm_by_key: dict[bytes, list[np.ndarray]] = {}
     initial_outer: list[np.ndarray] = []
@@ -230,13 +388,32 @@ def codesign_search(
                 np.asarray(w, np.int32) for w in warm
             ]
 
-    def evaluate_candidate(row: np.ndarray, specs) -> np.ndarray:
+    def evaluate_candidate(row, specs, island=0):
+        """Score one outer candidate; returns (objectives, event payload).
+
+        Runs the inner interleaving search under a thread-private registry
+        scope (the candidate's alphabet is live only on this thread, and a
+        failure rolls back all three registries for this thread alone).
+        Archive contributions are NOT inserted here — they travel in the
+        payload so the caller (legacy loop or async replay) controls
+        insertion order deterministically.
+        """
         key = cgenome.spec_set_key(row)
         hexkey = key.hex()
-        # `specs` comes decoded from outer_objectives_batch, which also
-        # batch-ensured their characterization; get() below self-heals any
-        # stragglers.
-        with foundry.temporary_variants():
+        iseed = inner_seed(cfg.seed, key)
+        inner_obj, imesh = island_ctx[island % len(island_ctx)]
+        local_stats = nsga2.EvalStats()
+        points: list[dict] = []
+
+        def point(ind_objs, genome, source):
+            points.append({
+                "objectives": [float(x) for x in ind_objs],
+                "genome": [int(x) for x in genome],
+                "alphabet_key": hexkey,
+                "source": source,
+            })
+
+        with foundry.registry_scope():
             ids, hw_rows, moment_rows = [], {}, {}
             for sp in specs:
                 ch, hw = spec_memo.get(sp)
@@ -255,15 +432,11 @@ def codesign_search(
             def archive_front(_gen, population):
                 for ind in population:
                     if ind.rank == 0:
-                        archive.insert(ArchivePoint(
-                            objectives=tuple(map(float, ind.objectives)),
-                            genome=tuple(map(int, ind.genome)),
-                            alphabet_key=hexkey,
-                        ))
+                        point(ind.objectives, ind.genome, "search")
 
             warm = warm_by_key.get(key)
             if warm is not None:
-                # Score and archive the warm sequences FIRST, tagged "warm":
+                # Score and record the warm sequences FIRST, tagged "warm":
                 # with the deterministic CRN evaluator this pins coverage of
                 # the warm front regardless of what the inner search keeps,
                 # and the archive's first-in-wins duplicate rule then keeps
@@ -272,86 +445,165 @@ def codesign_search(
                 # a falsifiable claim. The shared salted cache makes the
                 # inner search's generation-0 scoring of them free.
                 warm_eval = nsga2.BatchEvaluator(
-                    inner_objectives,
+                    inner_obj,
                     position_agnostic=cfg.inner_position_agnostic,
-                    mesh=mesh, pop_axis_name=pop_axis_name,
+                    mesh=imesh, pop_axis_name=pop_axis_name,
                     cache=inner_cache,
                 )
                 # Warm scoring is inner-search work: share the telemetry so
                 # the cache hits it primes stay attributable.
-                warm_eval.stats = inner_stats
+                warm_eval.stats = local_stats
                 for g, o in zip(warm, warm_eval(warm)):
-                    archive.insert(ArchivePoint(
-                        objectives=tuple(map(float, o)),
-                        genome=tuple(map(int, g)),
-                        alphabet_key=hexkey,
-                        source="warm",
-                    ))
+                    point(o, g, "warm")
             front = nsga2.optimize(
-                objectives_batch=inner_objectives,
+                objectives_batch=inner_obj,
                 genome_len=genome_len,
                 alphabet=alphabet,
                 pop_size=cfg.inner_pop,
                 generations=cfg.inner_generations,
-                seed=cfg.seed,
+                seed=iseed,
                 position_agnostic=cfg.inner_position_agnostic,
-                mesh=mesh,
+                mesh=imesh,
                 pop_axis_name=pop_axis_name,
                 initial_genomes=warm,
-                stats=inner_stats,
+                stats=local_stats,
                 memo_cache=inner_cache,
                 on_generation=archive_front,
                 log=None,
             )
             front_objs = np.stack([ind.objectives for ind in front])
         hv = nsga2.hypervolume(front_objs / ref, np.ones(ref.size))
-        archive.add_alphabet(hexkey, {
-            "spec_names": [sp.name for sp in specs],
-            "params": [list(map(int, cgenome.encode([p])))
-                       for p in cgenome.decode(cgenome.repair(row))],
-            "variant_ids": list(map(int, ids)),
-            "hw": hw_rows,
-            "moments": moment_rows,
-        })
-        candidate_info[hexkey] = {
+        info = {
             "spec_names": [sp.name for sp in specs],
             "hypervolume": float(hv),
             "library_area_um2": lib_area,
             "inner_front_size": int(len(front)),
         }
+        payload = {
+            "alphabet_key": hexkey,
+            "points": points,
+            "alphabet": {
+                "spec_names": [sp.name for sp in specs],
+                "params": [list(map(int, cgenome.encode([p])))
+                           for p in cgenome.decode(cgenome.repair(row))],
+                "variant_ids": list(map(int, ids)),
+                "hw": hw_rows,
+                "moments": moment_rows,
+            },
+            "candidate_info": info,
+        }
+        with telemetry_lock:
+            inner_stats.merge(local_stats)
         if log:
             log(f"  candidate {hexkey[:10]}: K={len(alphabet)} "
                 f"hv={hv:.4f} lib_area={lib_area:.0f}um2 "
                 f"front={len(front)}")
-        return np.array([-hv, lib_area])
-
-    def outer_objectives_batch(genomes: np.ndarray) -> np.ndarray:
-        rows = [cgenome.repair(g) for g in np.atleast_2d(genomes)]
-        per_row_specs = [novel_specs(row) for row in rows]
-        # One stacked bit-level sweep for the whole generation's novelty.
-        spec_memo.ensure([sp for specs in per_row_specs for sp in specs])
-        return np.stack([
-            evaluate_candidate(row, specs)
-            for row, specs in zip(rows, per_row_specs)
-        ])
+        return np.array([-hv, lib_area]), payload
 
     t0 = time.time()
-    outer_front = nsga2.optimize(
-        objectives_batch=outer_objectives_batch,
-        genome_len=cfg.n_specs * cgenome.N_GENES,
-        alphabet=(),
-        pop_size=cfg.outer_pop,
-        generations=cfg.outer_generations,
-        seed=cfg.seed + 17,
-        init_genome_fn=lambda rng: cgenome.random_genome(cfg.n_specs, rng),
-        crossover_fn=cgenome.crossover,
-        mutate_fn=lambda g, rng: cgenome.mutate(
-            g, rng, cfg.outer_mutation_rate),
-        key_fn=cgenome.spec_set_key,
-        initial_genomes=initial_outer or None,
-        stats=outer_stats,
-        log=(lambda s: log(f"[outer] {s}")) if log else None,
-    )
+    async_info = None
+    replay = None
+
+    if cfg.workers >= 1:
+        # Async island-model outer search. Budget mirrors the generational
+        # path: per-island population + generations*pop steady-state steps.
+        per_pop = max(2, cfg.outer_pop // cfg.n_islands)
+        steps = cfg.outer_generations * per_pop
+
+        def prepare_batch(genomes):
+            # Generation-stacked characterization: one bit-level sweep over
+            # every in-flight candidate's novelty, before workers touch it.
+            rows = [cgenome.repair(np.asarray(g)) for g in genomes]
+            spec_memo.ensure(
+                [sp for row in rows for sp in novel_specs(row)])
+
+        def eval_async(genome, island):
+            row = cgenome.repair(np.asarray(genome))
+            return evaluate_candidate(row, novel_specs(row), island)
+
+        res = nsga2.optimize_async(
+            evaluate_fn=eval_async,
+            genome_len=cfg.n_specs * cgenome.N_GENES,
+            init_genome_fn=lambda rng: cgenome.random_genome(
+                cfg.n_specs, rng),
+            crossover_fn=cgenome.crossover,
+            mutate_fn=lambda g, rng: cgenome.mutate(
+                g, rng, cfg.outer_mutation_rate),
+            key_fn=cgenome.spec_set_key,
+            pop_size=per_pop,
+            steps=steps,
+            n_islands=cfg.n_islands,
+            migration_interval=cfg.migration_interval,
+            migration_k=cfg.migration_k,
+            async_window=cfg.async_window,
+            n_workers=cfg.workers,
+            seed=cfg.seed + 17,
+            initial_genomes=initial_outer or None,
+            prepare_batch=prepare_batch,
+            stats=outer_stats,
+            log=(lambda s: log(f"[outer] {s}")) if log else None,
+        )
+        outer_front = res["front"]
+        replay = {
+            "format": REPLAY_FORMAT,
+            "seed": cfg.seed,
+            "config": dataclasses.asdict(cfg),
+            "events": res["events"],
+        }
+        # The archive is built ONLY here, by canonical replay — never fed
+        # during the run — so live and replayed archives are one code path.
+        replay_archive(replay, archive)
+        for e in sorted(res["events"],
+                        key=lambda e: (e["island"], e["phase"], e["step"])):
+            p = e["payload"]
+            candidate_info[p["alphabet_key"]] = p["candidate_info"]
+        async_info = {
+            "workers": cfg.workers,
+            "n_islands": cfg.n_islands,
+            "pop_per_island": per_pop,
+            "steps_per_island": steps,
+            "elapsed": res["elapsed"],
+            "queue_wait_fraction": res["queue_wait_fraction"],
+            "migration_wait_seconds": res["migration_wait_seconds"],
+            "islands": [
+                {"front_size": len(row["front"]),
+                 **row["stats"].as_dict()}
+                for row in res["islands"]
+            ],
+        }
+    else:
+        def outer_objectives_batch(genomes: np.ndarray) -> np.ndarray:
+            rows = [cgenome.repair(g) for g in np.atleast_2d(genomes)]
+            per_row_specs = [novel_specs(row) for row in rows]
+            # One stacked bit-level sweep for the generation's novelty.
+            spec_memo.ensure(
+                [sp for specs in per_row_specs for sp in specs])
+            out = []
+            for row, specs in zip(rows, per_row_specs):
+                objs, payload = evaluate_candidate(row, specs)
+                _insert_payload(archive, payload)
+                candidate_info[payload["alphabet_key"]] = (
+                    payload["candidate_info"])
+                out.append(objs)
+            return np.stack(out)
+
+        outer_front = nsga2.optimize(
+            objectives_batch=outer_objectives_batch,
+            genome_len=cfg.n_specs * cgenome.N_GENES,
+            alphabet=(),
+            pop_size=cfg.outer_pop,
+            generations=cfg.outer_generations,
+            seed=cfg.seed + 17,
+            init_genome_fn=lambda rng: cgenome.random_genome(
+                cfg.n_specs, rng),
+            crossover_fn=cgenome.crossover,
+            mutate_fn=lambda g, rng: cgenome.mutate(
+                g, rng, cfg.outer_mutation_rate),
+            key_fn=cgenome.spec_set_key,
+            initial_genomes=initial_outer or None,
+            stats=outer_stats,
+            log=(lambda s: log(f"[outer] {s}")) if log else None,
+        )
     seconds = time.time() - t0
 
     front_rows = []
@@ -363,7 +615,7 @@ def codesign_search(
             "spec_set": hexkey,
             **candidate_info.get(hexkey, {}),
         })
-    return {
+    result = {
         "config": dataclasses.asdict(cfg),
         "reference_point": ref.tolist(),
         "outer_front": front_rows,
@@ -379,3 +631,7 @@ def codesign_search(
             ),
         },
     }
+    if async_info is not None:
+        result["async"] = async_info
+        result["replay"] = replay
+    return result

@@ -20,6 +20,8 @@ attributes rebuilt whenever the variant registry changes — read them as
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import threading
 
 import numpy as np
 
@@ -52,9 +54,52 @@ TABLE_I: dict[str, HwSpec] = {
 }
 
 # Runtime extension (foundry-registered variants), keyed by variant name.
-_EXTRA: dict[str, HwSpec] = {}
-_VERSION = 0
-_TABLE_CACHE: tuple[tuple[int, int], dict[str, np.ndarray]] | None = None
+# Like schemes, the spec table is a stack of states per thread: the base
+# state is shared (historical module-global behavior); `push_scope` gives
+# the calling thread a private copy so concurrent candidate alphabets never
+# observe each other (see schemes.push_scope / foundry.registry_scope).
+_VERSION_COUNTER = itertools.count(1)
+
+
+class _HwState:
+    __slots__ = ("extra", "version", "table_cache")
+
+    def __init__(self, extra: dict[str, HwSpec], version: int):
+        self.extra = extra
+        self.version = version
+        self.table_cache: tuple[tuple[int, int], dict[str, np.ndarray]] | None = None
+
+    def copy(self) -> "_HwState":
+        return _HwState(dict(self.extra), next(_VERSION_COUNTER))
+
+    def touch(self) -> None:
+        self.version = next(_VERSION_COUNTER)
+
+
+_BASE = _HwState({}, 0)
+_SCOPES = threading.local()
+
+
+def _state() -> _HwState:
+    stack = getattr(_SCOPES, "stack", None)
+    return stack[-1] if stack else _BASE
+
+
+def push_scope() -> object:
+    """Enter a thread-private hw-spec scope; returns the `pop_scope` token."""
+    stack = getattr(_SCOPES, "stack", None)
+    if stack is None:
+        stack = _SCOPES.stack = []
+    st = _state().copy()
+    stack.append(st)
+    return st
+
+
+def pop_scope(token: object) -> None:
+    stack = getattr(_SCOPES, "stack", None)
+    if not stack or stack[-1] is not token:
+        raise RuntimeError("hwmodel scope pop does not match the last push")
+    stack.pop()
 
 
 def register_variant(name: str, spec: HwSpec, *, overwrite: bool = False) -> None:
@@ -63,43 +108,44 @@ def register_variant(name: str, spec: HwSpec, *, overwrite: bool = False) -> Non
     Mirrors the scheme-registry contract: collisions raise unless
     ``overwrite=True``; the paper's Table I rows can never be replaced.
     """
-    global _VERSION
     if name in TABLE_I:
         raise ValueError(f"paper Table I variant {name!r} cannot be re-registered")
-    if name in _EXTRA and not overwrite:
+    st = _state()
+    if name in st.extra and not overwrite:
         raise ValueError(
             f"hw spec for {name!r} already registered; pass overwrite=True"
         )
     if not isinstance(spec, HwSpec):
         raise TypeError(f"spec must be an HwSpec, got {type(spec)}")
-    _EXTRA[name] = spec
-    _VERSION += 1
+    st.extra[name] = spec
+    st.touch()
 
 
 def unregister_variant(name: str) -> None:
-    global _VERSION
     if name in TABLE_I:
         raise ValueError(f"paper Table I variant {name!r} cannot be unregistered")
-    del _EXTRA[name]
-    _VERSION += 1
+    st = _state()
+    del st.extra[name]
+    st.touch()
 
 
 def snapshot() -> tuple:
-    return (_VERSION, dict(_EXTRA))
+    st = _state()
+    return (st.version, dict(st.extra))
 
 
 def restore(state: tuple) -> None:
-    global _VERSION
     _, extra = state
-    _EXTRA.clear()
-    _EXTRA.update(extra)
-    _VERSION += 1
+    st = _state()
+    st.extra.clear()
+    st.extra.update(extra)
+    st.touch()
 
 
 def spec(name: str) -> HwSpec:
     """Hardware spec for any registered variant (paper or foundry)."""
     try:
-        return TABLE_I.get(name) or _EXTRA[name]
+        return TABLE_I.get(name) or _state().extra[name]
     except KeyError:
         raise KeyError(
             f"variant {name!r} has no hardware spec; register one via "
@@ -109,18 +155,19 @@ def spec(name: str) -> HwSpec:
 
 def _tables() -> dict[str, np.ndarray]:
     """Vectorized lookups indexed by variant id (schemes.VARIANTS order),
-    rebuilt when either the scheme registry or the spec table changes."""
-    global _TABLE_CACHE
-    key = (schemes.registry_version(), _VERSION)
-    if _TABLE_CACHE is None or _TABLE_CACHE[0] != key:
+    rebuilt when either the scheme registry or the spec table changes.
+    The cache lives on the state, so scoped and base tables never thrash."""
+    st = _state()
+    key = (schemes.registry_version(), st.version)
+    if st.table_cache is None or st.table_cache[0] != key:
         specs = [spec(v) for v in schemes.variant_names()]
-        _TABLE_CACHE = (key, {
+        st.table_cache = (key, {
             "PDP_PJ": np.array([s.pdp_pj for s in specs]),
             "AREA_UM2": np.array([s.area_um2 for s in specs]),
             "POWER_UW": np.array([s.power_uw for s in specs]),
             "DELAY_PS": np.array([s.delay_ps for s in specs]),
         })
-    return _TABLE_CACHE[1]
+    return st.table_cache[1]
 
 
 def __getattr__(name: str):

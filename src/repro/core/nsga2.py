@@ -21,8 +21,11 @@ evaluation.
 """
 from __future__ import annotations
 
+import collections
+import concurrent.futures
 import dataclasses
-from typing import Callable, Sequence
+import time
+from typing import Any, Callable, Sequence
 
 import numpy as np
 
@@ -55,6 +58,46 @@ class EvalStats:
             "genomes_scored": self.genomes_scored,
             "cache_hits": self.cache_hits,
             "cache_hit_rate": self.cache_hit_rate,
+        }
+
+    def merge(self, other: "EvalStats") -> None:
+        """Fold another telemetry record into this one (async workers keep
+        per-task EvalStats so concurrent updates never race; the scheduler
+        merges them on incorporation)."""
+        self.batch_calls += other.batch_calls
+        self.genomes_requested += other.genomes_requested
+        self.genomes_scored += other.genomes_scored
+        self.cache_hits += other.cache_hits
+
+
+@dataclasses.dataclass
+class IslandStats:
+    """Per-island telemetry from the asynchronous island-model optimizer."""
+
+    island: int
+    evals: int = 0  # tasks this island requested (init + steady offspring)
+    cache_hits: int = 0  # resolved from the shared memo / in-flight joins
+    eval_seconds: float = 0.0  # worker wall-clock of tasks it dispatched
+    queue_wait_seconds: float = 0.0  # ready -> worker-start, dispatched tasks
+    migration_wait_seconds: float = 0.0  # blocked on a neighbor's snapshot
+    migrants_in: int = 0
+    migrants_out: int = 0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache_hits / self.evals if self.evals else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "island": self.island,
+            "evals": self.evals,
+            "cache_hits": self.cache_hits,
+            "cache_hit_rate": self.cache_hit_rate,
+            "eval_seconds": self.eval_seconds,
+            "queue_wait_seconds": self.queue_wait_seconds,
+            "migration_wait_seconds": self.migration_wait_seconds,
+            "migrants_in": self.migrants_in,
+            "migrants_out": self.migrants_out,
         }
 
 
@@ -429,6 +472,381 @@ def optimize(
             log(f"gen {gen + 1}/{generations}: front0={len(f0)} best_last_obj={best:.4f}")
 
     return [ind for ind in pop if ind.rank == 0]
+
+
+class _AsyncTask:
+    """One evaluation request: (island, phase, step) owns exactly one event."""
+
+    __slots__ = ("island", "phase", "step", "genome", "key", "migrant",
+                 "t_ready")
+
+    def __init__(self, island, phase, step, genome, key, migrant, t_ready):
+        self.island = island
+        self.phase = phase  # 0 = initial population, 1 = steady-state
+        self.step = step
+        self.genome = genome
+        self.key = key
+        self.migrant = migrant
+        self.t_ready = t_ready
+
+
+class _Island:
+    """State machine of one island's deterministic logical schedule."""
+
+    def __init__(self, idx: int, rng: np.random.Generator, pop_size: int,
+                 steps: int):
+        self.idx = idx
+        self.rng = rng
+        self.pop_size = pop_size
+        self.steps = steps
+        self.pop: list[Individual] = []
+        self.init_results: list[Individual | None] = [None] * pop_size
+        self.init_left = pop_size
+        self.next_breed = 0  # next steady step to create
+        self.next_inc = 0  # next steady step to incorporate
+        self.buffer: dict[int, Individual] = {}  # reorder buffer
+        self.brood: collections.deque[np.ndarray] = collections.deque()
+        self.imports: collections.deque[np.ndarray] = collections.deque()
+        self.imported_epoch = 0
+        self.snapshots: dict[int, list[np.ndarray]] = {}
+        self.blocked_since: float | None = None
+        self.stats = IslandStats(island=idx)
+
+    @property
+    def done(self) -> bool:
+        return self.init_left == 0 and self.next_inc >= self.steps
+
+
+def optimize_async(
+    *,
+    evaluate_fn: Callable[[np.ndarray, int], tuple[np.ndarray, Any]],
+    genome_len: int,
+    init_genome_fn: Callable[[np.random.Generator], np.ndarray],
+    crossover_fn: Callable,
+    mutate_fn: Callable,
+    key_fn: Callable[[np.ndarray], bytes] | None = None,
+    memo_salt: bytes = b"",
+    pop_size: int = 8,
+    steps: int = 8,
+    n_islands: int = 1,
+    migration_interval: int = 0,
+    migration_k: int = 1,
+    async_window: int = 2,
+    n_workers: int = 1,
+    seed: int = 0,
+    initial_genomes: Sequence[np.ndarray] | None = None,
+    prepare_batch: Callable[[list[np.ndarray]], None] | None = None,
+    stats: EvalStats | None = None,
+    log: Callable[[str], None] | None = None,
+) -> dict:
+    """Steady-state asynchronous island-model NSGA-II over a work queue.
+
+    Evaluations run on ``n_workers`` threads; the scheduler (the calling
+    thread) breeds, routes results and evolves each island's population.
+    The search TRAJECTORY — every breeding decision, every population
+    state, every archive-relevant payload — is a pure function of
+    ``(seed, config)``, independent of worker count and of the order in
+    which evaluations happen to complete. Three mechanisms enforce that:
+
+      * per-island rng streams (``default_rng([seed, island])``), drawn
+        only at breeding time, in logical step order;
+      * a reorder buffer pinned to the breeding index: offspring ``k`` is
+        bred from the population having incorporated exactly the results
+        of offspring ``0 .. k - async_window`` (later completions wait in
+        the buffer even if they arrived early), so up to ``async_window``
+        evaluations are in flight per island while the state an offspring
+        is bred from never depends on timing;
+      * lagged deterministic migration: at every ``migration_interval``
+        steps (epoch ``e``), an island imports the elite snapshot its ring
+        neighbor published at epoch ``e - 1`` — a snapshot taken at a fixed
+        incorporation count, hence itself deterministic. Imports are
+        injected as the next ``migration_k`` offspring (consuming no rng
+        draws), and an island blocks (without stalling its in-flight
+        evaluations) until the neighbor's snapshot exists.
+
+    ``evaluate_fn(genome, island) -> (objectives, payload)`` runs on worker
+    threads and must be a pure function of the genome (the engine's CRN
+    discipline); the payload is recorded verbatim in the event log.
+    Identical genomes (by ``memo_salt + key_fn(genome)``) share one
+    evaluation through an in-flight-aware memo, and every task — cached or
+    not — still emits its own event, so the event log always contains
+    exactly ``n_islands * (pop_size + steps)`` entries with deterministic
+    ``(island, phase, step) -> (genome, objectives, payload)`` content.
+
+    ``prepare_batch(genomes)`` is called once per dispatch wave with every
+    genome about to go to the workers — across islands — so a caller can
+    front-load shared work (the codesign search stacks one bit-level
+    characterization sweep over all in-flight candidates' novel specs).
+
+    Returns a dict:
+      ``front``    merged rank-0 Individuals over the union of final island
+                   populations (deduplicated by memo key, island order);
+      ``islands``  per-island {"front", "stats"} (IslandStats telemetry);
+      ``events``   the completion-order event log (see codesign/evolve.py
+                   for the serialized replay format built on it);
+      ``elapsed``, ``queue_wait_fraction``, ``migration_wait_seconds``.
+    """
+    if n_islands < 1 or pop_size < 2 or async_window < 1 or n_workers < 1:
+        raise ValueError(
+            f"need n_islands>=1, pop_size>=2, async_window>=1, n_workers>=1; "
+            f"got {n_islands}, {pop_size}, {async_window}, {n_workers}"
+        )
+    if migration_interval < 0 or migration_k < 1:
+        raise ValueError("migration_interval must be >= 0, migration_k >= 1")
+    key_of = key_fn if key_fn is not None else (
+        lambda g: np.ascontiguousarray(g, np.int32).tobytes()
+    )
+    t0 = time.monotonic()
+    now = lambda: time.monotonic() - t0  # noqa: E731
+
+    islands = [
+        _Island(i, np.random.default_rng([seed, i]), pop_size, steps)
+        for i in range(n_islands)
+    ]
+    # Initial populations: deterministic per-island draws; warm-start
+    # genomes fill island 0 from the tail (the legacy generational policy).
+    init_tasks: list[_AsyncTask] = []
+    for isl in islands:
+        genomes = [np.asarray(init_genome_fn(isl.rng), np.int32)
+                   for _ in range(pop_size)]
+        if isl.idx == 0 and initial_genomes is not None:
+            warm = [np.asarray(g, np.int32) for g in initial_genomes]
+            for g in warm:
+                if g.shape != (genome_len,):
+                    raise ValueError(
+                        f"initial genome shape {g.shape} != ({genome_len},)"
+                    )
+            for i, g in enumerate(warm[:pop_size]):
+                genomes[pop_size - 1 - i] = g
+        for k, g in enumerate(genomes):
+            init_tasks.append(_AsyncTask(
+                isl.idx, 0, k, g, memo_salt + key_of(g), False, now()))
+
+    memo: dict[bytes, tuple[np.ndarray, Any]] = {}
+    inflight: dict[bytes, list[_AsyncTask]] = {}
+    fut_of: dict[concurrent.futures.Future, _AsyncTask] = {}
+    events: list[dict] = []
+    done_tasks = 0
+    total_tasks = n_islands * (pop_size + steps)
+    dispatched_busy = 0.0  # sum of (t_done - t_ready) over dispatched tasks
+
+    def elites(isl: _Island) -> list[np.ndarray]:
+        front = [ind for ind in isl.pop if ind.rank == 0]
+        front.sort(key=lambda ind: (tuple(ind.objectives),
+                                    ind.genome.tobytes()))
+        return [ind.genome.copy() for ind in front[:migration_k]]
+
+    def publish(isl: _Island) -> None:
+        if migration_interval > 0 and n_islands > 1:
+            if isl.init_left == 0 and isl.next_inc % migration_interval == 0:
+                isl.snapshots.setdefault(
+                    isl.next_inc // migration_interval, elites(isl))
+
+    def incorporate_to(isl: _Island, upto: int) -> bool:
+        """Fold buffered results in step order through index `upto`."""
+        while isl.next_inc <= upto:
+            ind = isl.buffer.pop(isl.next_inc, None)
+            if ind is None:
+                return False
+            union = isl.pop + [ind]
+            _rank_population(union)
+            union.sort(key=lambda x: (x.rank, -x.crowding))
+            isl.pop = union[:isl.pop_size]
+            _rank_population(isl.pop)
+            isl.next_inc += 1
+            publish(isl)
+        return True
+
+    def breed_ready(isl: _Island) -> list[_AsyncTask]:
+        """Create every offspring task the island may deterministically
+        breed right now (logical step order; lazy in-order incorporation
+        pinned to the breeding index)."""
+        if isl.init_left:
+            return []
+        out: list[_AsyncTask] = []
+        while isl.next_breed < isl.steps:
+            k = isl.next_breed
+            # Offspring k sees exactly results 0 .. k - async_window.
+            if not incorporate_to(isl, k - async_window):
+                break
+            if (migration_interval > 0 and n_islands > 1 and k > 0
+                    and k % migration_interval == 0
+                    and k // migration_interval > isl.imported_epoch):
+                e = k // migration_interval
+                neighbor = islands[(isl.idx - 1) % n_islands]
+                snap = neighbor.snapshots.get(e - 1)
+                if snap is None:
+                    if isl.blocked_since is None:
+                        isl.blocked_since = now()
+                    break
+                if isl.blocked_since is not None:
+                    isl.stats.migration_wait_seconds += (
+                        now() - isl.blocked_since)
+                    isl.blocked_since = None
+                isl.imported_epoch = e
+                isl.imports.extend(snap)
+                isl.stats.migrants_in += len(snap)
+                neighbor.stats.migrants_out += len(snap)
+            if isl.imports:
+                g, migrant = isl.imports.popleft(), True
+            else:
+                if not isl.brood:
+                    p1 = _tournament(isl.pop, isl.rng)
+                    p2 = _tournament(isl.pop, isl.rng)
+                    c1, c2 = crossover_fn(p1.genome, p2.genome, isl.rng)
+                    isl.brood.append(mutate_fn(c1, isl.rng))
+                    isl.brood.append(mutate_fn(c2, isl.rng))
+                g, migrant = isl.brood.popleft(), False
+            g = np.asarray(g, np.int32)
+            out.append(_AsyncTask(
+                isl.idx, 1, k, g, memo_salt + key_of(g), migrant, now()))
+            isl.next_breed += 1
+        if isl.next_breed >= isl.steps:
+            # Final drain: no more breeding gates incorporation.
+            incorporate_to(isl, isl.steps - 1)
+        return out
+
+    def complete(task: _AsyncTask, objs: np.ndarray, payload: Any,
+                 cached: bool, t_start: float | None,
+                 t_done: float | None) -> None:
+        nonlocal done_tasks, dispatched_busy
+        isl = islands[task.island]
+        isl.stats.evals += 1
+        if cached:
+            isl.stats.cache_hits += 1
+        else:
+            isl.stats.eval_seconds += t_done - t_start
+            isl.stats.queue_wait_seconds += t_start - task.t_ready
+            dispatched_busy += t_done - task.t_ready
+        events.append({
+            "seq": len(events),
+            "island": task.island,
+            "phase": task.phase,
+            "step": task.step,
+            "genome": [int(x) for x in task.genome],
+            "objectives": [float(x) for x in np.asarray(objs, float)],
+            "payload": payload,
+            "cached": bool(cached),
+            "migrant": bool(task.migrant),
+            "t_ready": task.t_ready,
+            "t_start": t_start,
+            "t_done": t_done,
+        })
+        ind = Individual(genome=np.asarray(task.genome, np.int32),
+                         objectives=np.asarray(objs, float))
+        if task.phase == 0:
+            isl.init_results[task.step] = ind
+            isl.init_left -= 1
+            if isl.init_left == 0:
+                isl.pop = list(isl.init_results)
+                _rank_population(isl.pop)
+                publish(isl)  # epoch-0 snapshot
+                if isl.steps == 0:
+                    pass
+        else:
+            isl.buffer[task.step] = ind
+            if isl.next_breed >= isl.steps:
+                incorporate_to(isl, isl.steps - 1)
+        done_tasks += 1
+
+    def run_one(task: _AsyncTask):
+        t_start = now()
+        objs, payload = evaluate_fn(task.genome, task.island)
+        return np.asarray(objs, float), payload, t_start, now()
+
+    executor = concurrent.futures.ThreadPoolExecutor(max_workers=n_workers)
+    dispatch_waves = 0
+    dispatched_total = 0
+    try:
+        pending_create: list[_AsyncTask] = list(init_tasks)
+        while done_tasks < total_tasks:
+            # Breed everything currently allowed, then resolve/dispatch.
+            for isl in islands:
+                pending_create.extend(breed_ready(isl))
+            to_dispatch: list[_AsyncTask] = []
+            resolved: list[tuple[_AsyncTask, np.ndarray, Any]] = []
+            for t in pending_create:
+                if t.key in memo:
+                    resolved.append((t, *memo[t.key]))
+                elif t.key in inflight:
+                    inflight[t.key].append(t)
+                else:
+                    inflight[t.key] = []
+                    to_dispatch.append(t)
+            pending_create = []
+            if to_dispatch:
+                dispatch_waves += 1
+                dispatched_total += len(to_dispatch)
+                if prepare_batch is not None:
+                    prepare_batch([t.genome for t in to_dispatch])
+                for t in to_dispatch:
+                    fut_of[executor.submit(run_one, t)] = t
+            if resolved:
+                for t, objs, payload in resolved:
+                    complete(t, objs, payload, True, None, None)
+                continue  # completions may have unblocked more breeding
+            if done_tasks >= total_tasks:
+                break
+            if not fut_of:
+                blocked = [(i.idx, i.next_breed, i.next_inc) for i in islands
+                           if not i.done]
+                raise RuntimeError(
+                    f"async scheduler stalled with nothing in flight: "
+                    f"{blocked} (island, next_breed, next_inc)")
+            done, _ = concurrent.futures.wait(
+                fut_of, return_when=concurrent.futures.FIRST_COMPLETED)
+            for fut in done:
+                t = fut_of.pop(fut)
+                objs, payload, t_start, t_done = fut.result()
+                memo[t.key] = (objs, payload)
+                waiters = inflight.pop(t.key, [])
+                complete(t, objs, payload, False, t_start, t_done)
+                for w in waiters:
+                    complete(w, objs, payload, True, None, None)
+    finally:
+        executor.shutdown(wait=True, cancel_futures=True)
+
+    elapsed = now()
+    if stats is not None:
+        stats.batch_calls += dispatch_waves
+        stats.genomes_requested += total_tasks
+        stats.genomes_scored += dispatched_total
+        stats.cache_hits += total_tasks - dispatched_total
+
+    # Merged front over the union of final island populations, deduplicated
+    # by memo key in island order (deterministic: island states are).
+    union: list[Individual] = []
+    seen: set[bytes] = set()
+    for isl in islands:
+        for ind in isl.pop:
+            k = memo_salt + key_of(ind.genome)
+            if k not in seen:
+                seen.add(k)
+                union.append(ind)
+    _rank_population(union)
+    front = [ind for ind in union if ind.rank == 0]
+    island_rows = []
+    for isl in islands:
+        island_rows.append({
+            "front": [ind for ind in isl.pop if ind.rank == 0],
+            "stats": isl.stats,
+        })
+    if log:
+        log(f"async: {total_tasks} tasks ({dispatched_total} evaluated, "
+            f"{total_tasks - dispatched_total} memo) on {n_workers} workers "
+            f"x {n_islands} islands in {elapsed:.2f}s")
+    return {
+        "front": front,
+        "islands": island_rows,
+        "events": events,
+        "elapsed": elapsed,
+        "queue_wait_fraction": (
+            sum(i.stats.queue_wait_seconds for i in islands) / dispatched_busy
+            if dispatched_busy else 0.0
+        ),
+        "migration_wait_seconds": sum(
+            i.stats.migration_wait_seconds for i in islands),
+    }
 
 
 def pareto_filter(objs: np.ndarray) -> np.ndarray:

@@ -25,10 +25,30 @@ valid across registrations. `VARIANTS` / `AM_VARIANTS` / `VARIANT_IDS` /
 `N_VARIANTS` are computed per access (PEP 562 module __getattr__) and always
 reflect the live registry; read them as `schemes.VARIANTS`, do not
 from-import them.
+
+Scoped registry states
+----------------------
+The registry is a *stack of states per thread*: with no scope pushed, every
+thread reads and mutates one shared base state (the historical module-global
+behavior, unchanged). `push_scope()` copies the current state onto the
+calling thread's private stack, so registrations inside the scope are
+visible only to that thread and vanish at `pop_scope()` — two worker
+threads can hold two different candidate alphabets live simultaneously
+(the codesign async evaluator does exactly this, via
+`foundry.registry_scope()`). A scope sees the base content as of the push
+and never observes later base mutations; `snapshot`/`restore` operate on
+the current state, so `temporary_variants()` composes inside a scope.
+
+Registry versions are drawn from one process-global monotone counter and
+reassigned on every mutation *and* on every push, so no two states (across
+threads, scopes, or time) ever share a version — version-keyed caches in
+hwmodel / surrogate / engine consumers can never alias across states.
 """
 from __future__ import annotations
 
 import hashlib
+import itertools
+import threading
 
 import numpy as np
 
@@ -103,26 +123,82 @@ def _seed_map(variant: str) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Registry (insertion-ordered: position == variant id)
+# Registry (insertion-ordered: position == variant id), one state per scope
 # ---------------------------------------------------------------------------
 
-_MAPS: dict[str, np.ndarray] = {v: _seed_map(v) for v in SEED_VARIANTS}
-_VERSION = 0
-_STACK_CACHE: tuple[int, np.ndarray] | None = None
+# Process-global version source: every state mutation (in any thread, any
+# scope) draws a fresh value, so versions are unique across states and
+# version-keyed caches downstream can never alias two different alphabets.
+_VERSION_COUNTER = itertools.count(1)
+
+
+class _RegistryState:
+    """One registry state: the map table plus its derived-value caches."""
+
+    __slots__ = ("maps", "version", "stack_cache", "signature_cache")
+
+    def __init__(self, maps: dict[str, np.ndarray], version: int):
+        self.maps = maps
+        self.version = version
+        self.stack_cache: tuple[int, np.ndarray] | None = None
+        self.signature_cache: tuple[int, bytes] | None = None
+
+    def copy(self) -> "_RegistryState":
+        return _RegistryState(
+            {k: v.copy() for k, v in self.maps.items()},
+            next(_VERSION_COUNTER),
+        )
+
+    def touch(self) -> None:
+        self.version = next(_VERSION_COUNTER)
+
+
+_BASE = _RegistryState({v: _seed_map(v) for v in SEED_VARIANTS}, 0)
+_SCOPES = threading.local()  # .stack: list[_RegistryState], per thread
+
+
+def _state() -> _RegistryState:
+    stack = getattr(_SCOPES, "stack", None)
+    return stack[-1] if stack else _BASE
+
+
+def push_scope() -> object:
+    """Enter a thread-private registry scope (a copy of the current state).
+
+    Returns an opaque token for `pop_scope`. Prefer the one-call
+    `foundry.registry_scope()`, which scopes all three registries together.
+    """
+    stack = getattr(_SCOPES, "stack", None)
+    if stack is None:
+        stack = _SCOPES.stack = []
+    st = _state().copy()
+    stack.append(st)
+    return st
+
+
+def pop_scope(token: object) -> None:
+    """Leave the scope entered by the matching `push_scope` (LIFO-checked)."""
+    stack = getattr(_SCOPES, "stack", None)
+    if not stack or stack[-1] is not token:
+        raise RuntimeError("registry scope pop does not match the last push")
+    stack.pop()
+
+
+def scope_depth() -> int:
+    """How many registry scopes the calling thread has pushed (0 = base)."""
+    return len(getattr(_SCOPES, "stack", ()) or ())
 
 
 def registry_version() -> int:
     """Monotone counter bumped on every registry mutation (cache key for
-    derived tables in hwmodel / surrogate / engine consumers)."""
-    return _VERSION
+    derived tables in hwmodel / surrogate / engine consumers). Unique per
+    state: two scopes never report the same version."""
+    return _state().version
 
 
 def variant_names() -> tuple[str, ...]:
     """All registered variant names in id order (seed first, then foundry)."""
-    return tuple(_MAPS)
-
-
-_SIGNATURE_CACHE: tuple[int, bytes] | None = None
+    return tuple(_state().maps)
 
 
 def registry_signature() -> bytes:
@@ -138,14 +214,14 @@ def registry_signature() -> bytes:
     re-registrations (e.g. the same spec set provisioned twice under
     `temporary_variants`) still share cache hits.
     """
-    global _SIGNATURE_CACHE
-    if _SIGNATURE_CACHE is None or _SIGNATURE_CACHE[0] != _VERSION:
+    st = _state()
+    if st.signature_cache is None or st.signature_cache[0] != st.version:
         h = hashlib.sha1()
-        for name, m in _MAPS.items():
+        for name, m in st.maps.items():
             h.update(name.encode())
             h.update(m.tobytes())
-        _SIGNATURE_CACHE = (_VERSION, h.digest())
-    return _SIGNATURE_CACHE[1]
+        st.signature_cache = (st.version, h.digest())
+    return st.signature_cache[1]
 
 
 def validate_scheme_map(m) -> np.ndarray:
@@ -172,17 +248,17 @@ def register_variant(name: str, scheme_map, *, overwrite: bool = False) -> int:
     be replaced — their bit patterns are pinned by the golden fixtures.
     Replacing an existing foundry variant keeps its id (append-only ids).
     """
-    global _VERSION
     if not name or not isinstance(name, str):
         raise ValueError(f"variant name must be a non-empty string, got {name!r}")
     if name in SEED_VARIANTS:
         raise ValueError(f"seed variant {name!r} cannot be re-registered")
-    if name in _MAPS and not overwrite:
+    st = _state()
+    if name in st.maps and not overwrite:
         raise ValueError(
             f"variant {name!r} already registered; pass overwrite=True to replace"
         )
-    _MAPS[name] = validate_scheme_map(scheme_map)
-    _VERSION += 1
+    st.maps[name] = validate_scheme_map(scheme_map)
+    st.touch()
     return variant_names().index(name)
 
 
@@ -190,43 +266,48 @@ def unregister_variant(name: str) -> None:
     """Remove a foundry variant. Ids of later-registered variants shift down;
     intended for test isolation — prefer `snapshot`/`restore` around a batch
     of registrations."""
-    global _VERSION
     if name in SEED_VARIANTS:
         raise ValueError(f"seed variant {name!r} cannot be unregistered")
-    if name not in _MAPS:
+    st = _state()
+    if name not in st.maps:
         raise KeyError(name)
-    del _MAPS[name]
-    _VERSION += 1
+    del st.maps[name]
+    st.touch()
 
 
 def snapshot() -> tuple:
-    """Opaque registry state for later `restore` (test isolation)."""
-    return (tuple(_MAPS), {k: v.copy() for k, v in _MAPS.items()})
+    """Opaque registry state for later `restore` (test isolation).
+
+    Snapshots the *current* state — inside a scope, the scope's state — so
+    `temporary_variants()` composes with `push_scope` naturally.
+    """
+    maps = _state().maps
+    return (tuple(maps), {k: v.copy() for k, v in maps.items()})
 
 
 def restore(state: tuple) -> None:
-    global _VERSION
     order, maps = state
-    _MAPS.clear()
+    st = _state()
+    st.maps.clear()
     for k in order:
-        _MAPS[k] = maps[k]
-    _VERSION += 1
+        st.maps[k] = maps[k]
+    st.touch()
 
 
 def scheme_map(variant: str) -> np.ndarray:
     """Return the (3, 48) compressor-code map for a registered variant."""
     try:
-        return _MAPS[variant].copy()
+        return _state().maps[variant].copy()
     except KeyError:
         raise ValueError(f"unknown variant {variant!r}") from None
 
 
 def scheme_stack() -> np.ndarray:
     """(N_VARIANTS, 3, 48) stack of all variant maps, indexed by variant id."""
-    global _STACK_CACHE
-    if _STACK_CACHE is None or _STACK_CACHE[0] != _VERSION:
-        _STACK_CACHE = (_VERSION, np.stack(list(_MAPS.values()), axis=0))
-    return _STACK_CACHE[1]
+    st = _state()
+    if st.stack_cache is None or st.stack_cache[0] != st.version:
+        st.stack_cache = (st.version, np.stack(list(st.maps.values()), axis=0))
+    return st.stack_cache[1]
 
 
 def __getattr__(name: str):
@@ -236,7 +317,7 @@ def __getattr__(name: str):
     if name == "AM_VARIANTS":
         return variant_names()[1:]
     if name == "VARIANT_IDS":
-        return {n: i for i, n in enumerate(_MAPS)}
+        return {n: i for i, n in enumerate(_state().maps)}
     if name == "N_VARIANTS":
-        return len(_MAPS)
+        return len(_state().maps)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -28,8 +28,10 @@ sharded search — sees the extended alphabet without re-tracing host code.
 """
 from __future__ import annotations
 
+import itertools
 import json
 import pathlib
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -42,12 +44,58 @@ _CACHE_FILE = pathlib.Path(__file__).with_name("_surrogate_stats.json")
 _CALIB_N = 1 << 18
 _CALIB_SEED = 1234
 
-# Foundry-registered relative-error stats, keyed by variant name.
-_EXTRA_STATS: dict[str, dict[str, float]] = {}
-_VERSION = 0
+# Foundry-registered relative-error stats, keyed by variant name. Same
+# scoped-state discipline as schemes/hwmodel: one shared base state, plus a
+# thread-private stack entered via `push_scope` (foundry.registry_scope), so
+# concurrent candidate alphabets carry independent moment tables.
+_VERSION_COUNTER = itertools.count(1)
 _SEED_STATS: dict[str, dict[str, float]] | None = None
-_STATS_CACHE: tuple[tuple[int, int], dict[str, dict[str, float]]] | None = None
-_MOMENTS_CACHE: tuple[tuple[int, int], tuple[np.ndarray, np.ndarray]] | None = None
+_SEED_STATS_LOCK = threading.Lock()
+
+
+class _SurrogateState:
+    __slots__ = ("extra", "version", "stats_cache", "moments_cache")
+
+    def __init__(self, extra: dict[str, dict[str, float]], version: int):
+        self.extra = extra
+        self.version = version
+        self.stats_cache = None
+        self.moments_cache = None
+
+    def copy(self) -> "_SurrogateState":
+        return _SurrogateState(
+            {k: dict(v) for k, v in self.extra.items()},
+            next(_VERSION_COUNTER),
+        )
+
+    def touch(self) -> None:
+        self.version = next(_VERSION_COUNTER)
+
+
+_BASE = _SurrogateState({}, 0)
+_SCOPES = threading.local()
+
+
+def _reg_state() -> _SurrogateState:
+    stack = getattr(_SCOPES, "stack", None)
+    return stack[-1] if stack else _BASE
+
+
+def push_scope() -> object:
+    """Enter a thread-private moments scope; returns the `pop_scope` token."""
+    stack = getattr(_SCOPES, "stack", None)
+    if stack is None:
+        stack = _SCOPES.stack = []
+    st = _reg_state().copy()
+    stack.append(st)
+    return st
+
+
+def pop_scope(token: object) -> None:
+    stack = getattr(_SCOPES, "stack", None)
+    if not stack or stack[-1] is not token:
+        raise RuntimeError("surrogate scope pop does not match the last push")
+    stack.pop()
 
 
 def calibrate_moments(
@@ -83,14 +131,18 @@ def _seed_variant_stats() -> dict[str, dict[str, float]]:
     global _SEED_STATS
     if _SEED_STATS is not None:
         return _SEED_STATS
-    if _CACHE_FILE.exists():
-        _SEED_STATS = json.loads(_CACHE_FILE.read_text())
-        return _SEED_STATS
-    _SEED_STATS = _calibrate_seed()
-    try:
-        _CACHE_FILE.write_text(json.dumps(_SEED_STATS, indent=1))
-    except OSError:
-        pass
+    with _SEED_STATS_LOCK:  # one thread calibrates; the rest reuse
+        if _SEED_STATS is not None:
+            return _SEED_STATS
+        if _CACHE_FILE.exists():
+            _SEED_STATS = json.loads(_CACHE_FILE.read_text())
+            return _SEED_STATS
+        stats = _calibrate_seed()
+        try:
+            _CACHE_FILE.write_text(json.dumps(stats, indent=1))
+        except OSError:
+            pass
+        _SEED_STATS = stats
     return _SEED_STATS
 
 
@@ -102,48 +154,49 @@ def register_moments(
     Mirrors the scheme-registry contract: collisions raise unless
     ``overwrite=True``; seed-variant stats can never be replaced.
     """
-    global _VERSION
     if name in schemes.SEED_VARIANTS:
         raise ValueError(f"seed variant {name!r} stats cannot be re-registered")
-    if name in _EXTRA_STATS and not overwrite:
+    st = _reg_state()
+    if name in st.extra and not overwrite:
         raise ValueError(
             f"moments for {name!r} already registered; pass overwrite=True"
         )
-    _EXTRA_STATS[name] = {"mre": float(mre), "rmsre": float(rmsre)}
-    _VERSION += 1
+    st.extra[name] = {"mre": float(mre), "rmsre": float(rmsre)}
+    st.touch()
 
 
 def unregister_moments(name: str) -> None:
-    global _VERSION
-    del _EXTRA_STATS[name]
-    _VERSION += 1
+    st = _reg_state()
+    del st.extra[name]
+    st.touch()
 
 
 def snapshot() -> tuple:
-    return (_VERSION, {k: dict(v) for k, v in _EXTRA_STATS.items()})
+    st = _reg_state()
+    return (st.version, {k: dict(v) for k, v in st.extra.items()})
 
 
 def restore(state: tuple) -> None:
-    global _VERSION
     _, extra = state
-    _EXTRA_STATS.clear()
-    _EXTRA_STATS.update(extra)
-    _VERSION += 1
+    st = _reg_state()
+    st.extra.clear()
+    st.extra.update(extra)
+    st.touch()
 
 
 def _cache_key() -> tuple[int, int]:
-    return (schemes.registry_version(), _VERSION)
+    return (schemes.registry_version(), _reg_state().version)
 
 
 def variant_stats() -> dict[str, dict[str, float]]:
     """Per-variant relative-error moments for the live alphabet, id order."""
-    global _STATS_CACHE
+    reg = _reg_state()
     key = _cache_key()
-    if _STATS_CACHE is None or _STATS_CACHE[0] != key:
+    if reg.stats_cache is None or reg.stats_cache[0] != key:
         seed = _seed_variant_stats()
         stats: dict[str, dict[str, float]] = {}
         for v in schemes.variant_names():
-            st = seed.get(v) or _EXTRA_STATS.get(v)
+            st = seed.get(v) or reg.extra.get(v)
             if st is None:
                 raise KeyError(
                     f"variant {v!r} has no calibrated moments; register them "
@@ -151,15 +204,15 @@ def variant_stats() -> dict[str, dict[str, float]]:
                     "this for you)"
                 )
             stats[v] = st
-        _STATS_CACHE = (key, stats)
-    return _STATS_CACHE[1]
+        reg.stats_cache = (key, stats)
+    return reg.stats_cache[1]
 
 
 def moment_tables() -> tuple[np.ndarray, np.ndarray]:
     """(mu, sigma) float32 arrays indexed by variant id (schemes.VARIANTS)."""
-    global _MOMENTS_CACHE
+    reg = _reg_state()
     key = _cache_key()
-    if _MOMENTS_CACHE is None or _MOMENTS_CACHE[0] != key:
+    if reg.moments_cache is None or reg.moments_cache[0] != key:
         st = variant_stats()
         mu = np.array([st[v]["mre"] for v in st], np.float32)
         # sigma^2 = RMSRE^2 - MRE^2 (centered second moment).
@@ -170,8 +223,8 @@ def moment_tables() -> tuple[np.ndarray, np.ndarray]:
             ],
             np.float32,
         )
-        _MOMENTS_CACHE = (key, (mu, sg))
-    return _MOMENTS_CACHE[1]
+        reg.moments_cache = (key, (mu, sg))
+    return reg.moments_cache[1]
 
 
 def tile_moments(variant_tiles, k: int, n: int, tile_k: int, tile_n: int):

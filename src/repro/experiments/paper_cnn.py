@@ -600,6 +600,11 @@ def codesign_study(
     char_n: int = 1 << 15,
     char_seed: int = 0,
     mesh=None,
+    workers: int = 0,
+    n_islands: int = 1,
+    migration_interval: int = 2,
+    migration_k: int = 1,
+    async_window: int = 2,
     baseline_name: str | None = "foundry_study.json",
     out_name: str | None = "codesign_study.json",
     log=print,
@@ -610,6 +615,17 @@ def codesign_study(
     genomes, scoring every candidate alphabet by an inner interleaving
     search through the blocked-GEMM population evaluator (optionally
     ``mesh``-sharded, so inner evaluations stay population-batched).
+
+    ``workers >= 1`` switches the outer search to the asynchronous
+    island-model work queue (codesign.CodesignConfig.workers): candidate
+    evaluations run concurrently under thread-private registry scopes, and
+    the archive is identical at any worker count (built by deterministic
+    replay of the event log — returned as ``results["replay"]``, kept out
+    of the JSON artifact for size). With ``n_islands > 1`` and a ``mesh``,
+    each island runs its inner searches on its own round-robin mesh shard
+    (parallel.sharding.island_meshes); the per-island evaluators are
+    numerically identical per genome (the engine's sharded CRN parity), as
+    the shared outer memo requires.
 
     The PR-4 foundry alphabet (`foundry.default_family()[:n_specs]`) is
     injected as one outer seed candidate (codesign.paper_family_params
@@ -703,13 +719,33 @@ def codesign_study(
         # nsga_study): amplified noise keys on the exact sequence.
         inner_position_agnostic=noise_scale <= 1.0,
         char_n=char_n, char_seed=char_seed, seed=seed,
+        workers=workers, n_islands=n_islands,
+        migration_interval=migration_interval, migration_k=migration_k,
+        async_window=async_window,
     )
+    island_kwargs = {}
+    if workers >= 1 and n_islands > 1 and mesh is not None:
+        from repro.parallel import sharding
+
+        submeshes = sharding.island_meshes(mesh, n_islands)
+        island_evals = [
+            make_batched_evaluator(params, n_images, noise_scale, mesh=m)
+            for m in submeshes
+        ]
+        island_kwargs = {
+            "island_accuracy_batch": [
+                (lambda g, ev=ev: ev(g, eval_key)) for ev in island_evals
+            ],
+            "island_meshes": submeshes,
+        }
     log(f"== codesign search (outer {outer_pop}x{outer_generations}, inner "
-        f"{inner_pop}x{inner_generations}, n_images={n_images}) ==")
+        f"{inner_pop}x{inner_generations}, n_images={n_images}"
+        + (f", async workers={workers} islands={n_islands}"
+           if workers >= 1 else "") + ") ==")
     res = codesign.codesign_search(
         accuracy_batch, genome_len=N_SLOTS, cfg=cfg,
         seed_candidates=[(compat, warm)] if compat is not None else (),
-        mesh=mesh, log=log,
+        mesh=mesh, log=log, **island_kwargs,
     )
     archive = res["archive"]
 
@@ -767,11 +803,17 @@ def codesign_study(
         "weakly_dominates_foundry_front": dominates,
         "search_front_weakly_dominates_baseline": search_dominates,
     }
+    if "async" in res:
+        results["async"] = res["async"]  # per-island EvalStats telemetry
     if out_name:
         ARTIFACTS.mkdir(exist_ok=True)
         out = ARTIFACTS / out_name
         out.write_text(json.dumps(results, indent=1))
         log(f"wrote {out}")
+    if "replay" in res:
+        # Returned for parity checks; deliberately not serialized (the event
+        # log carries every inner front and dwarfs the artifact).
+        results["replay"] = res["replay"]
     return results
 
 

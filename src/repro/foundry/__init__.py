@@ -38,6 +38,7 @@ from repro.foundry.registry import (
     list_variants,
     register,
     register_family,
+    registry_scope,
     temporary_variants,
     unregister,
 )
@@ -68,6 +69,7 @@ __all__ = [
     "list_variants",
     "register",
     "register_family",
+    "registry_scope",
     "spec_from_map",
     "stage_checkerboard_family",
     "temporary_variants",

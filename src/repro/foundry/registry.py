@@ -18,7 +18,12 @@ engine variant:
 The registry contract mirrors core/engine.py::register_sequence: collisions
 raise unless ``overwrite=True``; seed variants can never be replaced.
 `temporary_variants()` snapshots and restores all three module registries —
-use it around registrations in tests and benchmarks.
+use it around registrations in tests and benchmarks. `registry_scope()` is
+the concurrent counterpart: it pushes a *thread-private* state onto all
+three registries, so worker threads can hold different candidate alphabets
+live simultaneously (the codesign async evaluator) — registrations inside
+a scope are invisible to every other thread and vanish on exit, even when
+the scoped work raises.
 """
 from __future__ import annotations
 
@@ -161,7 +166,11 @@ def unregister(name: str) -> None:
 def temporary_variants():
     """Scope foundry registrations: restores the scheme/hw/surrogate
     registries on exit, so tests and benchmarks leave the seed alphabet
-    (and every id-indexed consumer) exactly as found."""
+    (and every id-indexed consumer) exactly as found.
+
+    Operates on the *current* registry state (snapshot/restore), so it
+    composes inside a `registry_scope`; it does NOT isolate across threads —
+    use `registry_scope` for concurrent registrations."""
     states = (schemes.snapshot(), hwmodel.snapshot(), surrogate.snapshot())
     try:
         yield
@@ -169,3 +178,27 @@ def temporary_variants():
         schemes.restore(states[0])
         hwmodel.restore(states[1])
         surrogate.restore(states[2])
+
+
+@contextlib.contextmanager
+def registry_scope():
+    """Thread-isolated registry context over all three registries.
+
+    Pushes a private copy of the current scheme/hw/surrogate state onto the
+    calling thread's scope stack: registrations inside the `with` block are
+    visible only to this thread (other threads — and this thread after
+    exit — keep seeing the base registries untouched), and everything is
+    popped on exit in LIFO order even when the scoped work raises, so a
+    failed worker can never leak partial registrations into any registry.
+
+    This is what lets two codesign candidates' alphabets be live
+    simultaneously instead of serializing on global registry mutation.
+    Scopes nest, and `temporary_variants()` works inside one.
+    """
+    toks = (schemes.push_scope(), hwmodel.push_scope(), surrogate.push_scope())
+    try:
+        yield
+    finally:
+        surrogate.pop_scope(toks[2])
+        hwmodel.pop_scope(toks[1])
+        schemes.pop_scope(toks[0])

@@ -102,6 +102,30 @@ def make_pop_mesh(n_devices: int | None = None, axis_name: str = "pop") -> Mesh:
         raise ValueError(f"asked for {n} devices, host has {len(devs)}")
     return Mesh(np.asarray(devs[:n]), (axis_name,))
 
+
+def island_meshes(
+    mesh: Mesh | None, n_islands: int, axis_name: str = "pop"
+) -> list[Mesh | None]:
+    """Split a population mesh into per-island sub-meshes (codesign async).
+
+    Round-robin over the mesh's devices so island i owns ``devs[i::n]`` —
+    every island gets a contiguous share of the host's compute and the
+    device counts differ by at most one. When the mesh has fewer devices
+    than islands, islands share devices (``devs[i % len]``, a 1-device
+    mesh each); when ``mesh`` is None (unsharded evaluators), every island
+    gets None and the evaluators run unsharded side by side.
+    """
+    if n_islands < 1:
+        raise ValueError(f"n_islands must be >= 1, got {n_islands}")
+    if mesh is None:
+        return [None] * n_islands
+    devs = list(mesh.devices.ravel())
+    out = []
+    for i in range(n_islands):
+        share = devs[i::n_islands] or [devs[i % len(devs)]]
+        out.append(Mesh(np.asarray(share), (axis_name,)))
+    return out
+
 # logical axis -> mesh axis (or tuple of mesh axes, tried jointly)
 DEFAULT_RULES: dict[str, Any] = {
     "batch": ("pod", "data"),

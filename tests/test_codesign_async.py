@@ -1,0 +1,354 @@
+"""Async island-model co-design: determinism, isolation, parity.
+
+The acceptance bar of the async outer search is *bitwise* reproducibility:
+the search trajectory — and with it the elite archive — must be a pure
+function of (seed, config), independent of worker count and completion
+order. These tests gate that at three levels: the optimizer
+(nsga2.optimize_async over synthetic objectives), the codesign search
+(codesign_search with a synthetic accuracy evaluator), and — in the slow
+suite — the full study against the real CNN evaluator. Plus the registry
+machinery underneath: thread-private scopes that never observe each other
+and roll back completely on failure.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import codesign, foundry
+from repro.codesign import genome as cg
+from repro.core import hwmodel, nsga2, schemes, surrogate
+
+
+# ---------------------------------------------------------------------------
+# Registry scopes: thread isolation + rollback
+# ---------------------------------------------------------------------------
+
+
+def _dummy_spec(tag: str):
+    return foundry.PlacementSpec(
+        tag, regions=(foundry.Region(code=1, cols=(0, 16)),))
+
+
+def test_registry_scope_thread_isolation():
+    """Two concurrent scopes never observe each other's variants, across
+    all three registries; the base registry is untouched throughout."""
+    base_names = schemes.variant_names()
+    barrier = threading.Barrier(2)
+    errors: list[str] = []
+
+    def worker(i: int):
+        try:
+            with foundry.registry_scope():
+                foundry.register(_dummy_spec(f"scoped_{i}"), n=1 << 8)
+                barrier.wait(timeout=30)  # both alphabets live NOW
+                names = schemes.variant_names()
+                assert f"scoped_{i}" in names, names
+                assert f"scoped_{1 - i}" not in names, names
+                # id-indexed consumers sized to THIS scope's alphabet
+                assert len(hwmodel.PDP_PJ) == len(names)
+                assert len(surrogate.moment_tables()[0]) == len(names)
+                hwmodel.spec(f"scoped_{i}")
+                with pytest.raises(KeyError):
+                    hwmodel.spec(f"scoped_{1 - i}")
+        except Exception as e:  # pragma: no cover - surfaced below
+            errors.append(f"worker {i}: {e!r}")
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors, errors
+    assert schemes.variant_names() == base_names
+
+
+def test_registry_scope_rollback_on_failure_leaks_nothing():
+    """A worker failing mid-scope leaves zero residue in any registry."""
+    with pytest.raises(RuntimeError, match="boom"):
+        with foundry.registry_scope():
+            foundry.register(_dummy_spec("leak_test"), n=1 << 8)
+            assert "leak_test" in schemes.variant_names()
+            raise RuntimeError("boom")
+    assert "leak_test" not in schemes.variant_names()
+    with pytest.raises(KeyError):
+        hwmodel.spec("leak_test")
+    with pytest.raises(KeyError):
+        surrogate.variant_stats()["leak_test"]
+    # the partial-registration rollback inside register() also composes
+    # with scopes: a colliding name fails cleanly
+    with foundry.registry_scope():
+        foundry.register(_dummy_spec("collide"), n=1 << 8)
+        names = schemes.variant_names()
+        with pytest.raises(ValueError, match="already registered"):
+            foundry.register(_dummy_spec("collide"), n=1 << 8)
+        assert schemes.variant_names() == names
+        assert hwmodel.spec("collide") is not None
+        assert "collide" in surrogate.variant_stats()
+
+
+def test_temporary_variants_composes_inside_scope():
+    with foundry.registry_scope():
+        with foundry.temporary_variants():
+            foundry.register(_dummy_spec("inner_tmp"), n=1 << 8)
+            assert "inner_tmp" in schemes.variant_names()
+        assert "inner_tmp" not in schemes.variant_names()
+
+
+# ---------------------------------------------------------------------------
+# optimize_async: trajectory determinism
+# ---------------------------------------------------------------------------
+
+
+def _toy_ops():
+    def evaluate(genome, island):
+        g = np.asarray(genome, float)
+        return (np.array([float(g.sum()), float(((g - 3.0) ** 2).sum())]),
+                {"s": int(g.sum())})
+
+    def init_fn(rng):
+        return rng.integers(0, 8, size=5).astype(np.int32)
+
+    def crossover(a, b, rng):
+        m = rng.random(a.size) < 0.5
+        return np.where(m, a, b), np.where(m, b, a)
+
+    def mutate(g, rng):
+        g = g.copy()
+        m = rng.random(g.size) < 0.3
+        g[m] = rng.integers(0, 8, size=g.size)[m]
+        return g
+
+    return evaluate, init_fn, crossover, mutate
+
+
+def _run_async(workers, *, n_islands=2, migration_interval=3, steps=12,
+               seed=7):
+    evaluate, init_fn, crossover, mutate = _toy_ops()
+    stats = nsga2.EvalStats()
+    res = nsga2.optimize_async(
+        evaluate_fn=evaluate, genome_len=5, init_genome_fn=init_fn,
+        crossover_fn=crossover, mutate_fn=mutate,
+        pop_size=6, steps=steps, n_islands=n_islands,
+        migration_interval=migration_interval, migration_k=2,
+        async_window=3, n_workers=workers, seed=seed, stats=stats)
+    return res, stats
+
+
+def _event_sig(res):
+    """Worker-count-invariant part of the event log, canonically ordered."""
+    sig = [(e["island"], e["phase"], e["step"], tuple(e["genome"]),
+            tuple(e["objectives"]), e["migrant"],
+            json.dumps(e["payload"], sort_keys=True))
+           for e in res["events"]]
+    return sorted(sig)
+
+
+def test_optimize_async_worker_count_parity():
+    r1, s1 = _run_async(1)
+    r2, s2 = _run_async(2)
+    r4, s4 = _run_async(4)
+    assert _event_sig(r1) == _event_sig(r2) == _event_sig(r4)
+    fronts = [sorted((tuple(i.genome.tolist()), tuple(i.objectives.tolist()))
+                     for i in r["front"]) for r in (r1, r2, r4)]
+    assert fronts[0] == fronts[1] == fronts[2]
+    # one event per task, cached included
+    assert len(r1["events"]) == 2 * (6 + 12)
+    assert s1.genomes_requested == s2.genomes_requested == 36
+    # memo totals are deterministic too (keys are, even if who-computes isn't)
+    assert s1.cache_hits == s2.cache_hits == s4.cache_hits
+
+
+def test_optimize_async_migration_flows_and_telemetry():
+    res, _ = _run_async(2)
+    mig_in = sum(r["stats"].migrants_in for r in res["islands"])
+    mig_out = sum(r["stats"].migrants_out for r in res["islands"])
+    assert mig_in == mig_out > 0
+    migrant_events = [e for e in res["events"] if e["migrant"]]
+    assert len(migrant_events) == mig_in
+    for r in res["islands"]:
+        st = r["stats"]
+        assert st.evals == 6 + 12
+        assert 0.0 <= st.cache_hit_rate <= 1.0
+        d = st.as_dict()
+        assert d["island"] == st.island and "queue_wait_seconds" in d
+    assert 0.0 <= res["queue_wait_fraction"] <= 1.0
+
+
+def test_optimize_async_single_island_no_migration():
+    r1, _ = _run_async(1, n_islands=1, migration_interval=0)
+    r3, _ = _run_async(3, n_islands=1, migration_interval=0)
+    assert _event_sig(r1) == _event_sig(r3)
+    assert not any(e["migrant"] for e in r1["events"])
+
+
+def test_optimize_async_seed_changes_trajectory():
+    ra, _ = _run_async(1, seed=7)
+    rb, _ = _run_async(1, seed=8)
+    assert _event_sig(ra) != _event_sig(rb)
+
+
+def test_optimize_async_rejects_bad_geometry():
+    evaluate, init_fn, crossover, mutate = _toy_ops()
+    with pytest.raises(ValueError, match="n_workers"):
+        nsga2.optimize_async(
+            evaluate_fn=evaluate, genome_len=5, init_genome_fn=init_fn,
+            crossover_fn=crossover, mutate_fn=mutate, n_workers=0)
+
+
+def test_optimize_async_worker_exception_propagates():
+    evaluate, init_fn, crossover, mutate = _toy_ops()
+
+    def bad_eval(genome, island):
+        raise RuntimeError("evaluator exploded")
+
+    with pytest.raises(RuntimeError, match="evaluator exploded"):
+        nsga2.optimize_async(
+            evaluate_fn=bad_eval, genome_len=5, init_genome_fn=init_fn,
+            crossover_fn=crossover, mutate_fn=mutate,
+            pop_size=4, steps=2, n_workers=2, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# inner-seed derivation (the seed-aliasing fix)
+# ---------------------------------------------------------------------------
+
+
+def test_inner_seed_distinct_per_spec_set_stable_per_spelling():
+    rng = np.random.default_rng(0)
+    g1 = cg.random_genome(2, rng)
+    g2 = cg.random_genome(2, rng)
+    k1, k2 = cg.spec_set_key(g1), cg.spec_set_key(g2)
+    if k1 != k2:  # overwhelmingly likely
+        assert codesign.inner_seed(0, k1) != codesign.inner_seed(0, k2)
+    # block order is a re-spelling of the same set -> same inner seed
+    perm = np.concatenate([g1[cg.N_GENES:], g1[:cg.N_GENES]])
+    assert codesign.inner_seed(5, cg.spec_set_key(perm)) == \
+        codesign.inner_seed(5, k1)
+
+
+# ---------------------------------------------------------------------------
+# codesign_search: async parity + replay (synthetic evaluator — fast gate)
+# ---------------------------------------------------------------------------
+
+
+def _toy_accuracy(genomes):
+    g = np.atleast_2d(np.asarray(genomes, float))
+    return 1.0 / (1.0 + 0.02 * g.mean(axis=1))
+
+
+def _search(workers):
+    cfg = codesign.CodesignConfig(
+        n_specs=3, outer_pop=4, outer_generations=2, inner_pop=6,
+        inner_generations=2, char_n=1 << 9, seed=0,
+        workers=workers, n_islands=2, migration_interval=2,
+        migration_k=1, async_window=2)
+    return codesign.codesign_search(_toy_accuracy, genome_len=12, cfg=cfg)
+
+
+def test_codesign_async_parity_and_replay():
+    names_before = schemes.variant_names()
+    r1 = _search(1)
+    r2 = _search(2)
+    assert schemes.variant_names() == names_before  # scopes rolled back
+    a1 = json.dumps(r1["archive"].as_dict(), sort_keys=True)
+    a2 = json.dumps(r2["archive"].as_dict(), sort_keys=True)
+    assert a1 == a2
+    assert sorted(json.dumps(row, sort_keys=True)
+                  for row in r1["outer_front"]) == \
+        sorted(json.dumps(row, sort_keys=True) for row in r2["outer_front"])
+    # replay from a JSON round-tripped log is bitwise-identical
+    log = json.loads(json.dumps(r2["replay"]))
+    assert log["format"] == codesign.REPLAY_FORMAT
+    assert json.dumps(codesign.replay_archive(log).as_dict(),
+                      sort_keys=True) == a2
+    # telemetry present per island
+    assert len(r2["async"]["islands"]) == 2
+    for row in r2["async"]["islands"]:
+        assert row["evals"] > 0
+    # payload points carry honest source tags only
+    for e in r2["replay"]["events"]:
+        for p in e["payload"]["points"]:
+            assert p["source"] in ("warm", "search")
+
+
+def test_codesign_async_warm_candidate_covered():
+    """Seed-candidate warm points survive the async path with their tag."""
+    compat = cg.encode(cg.paper_family_params(2))
+    warm = [np.full(12, 9, np.int32), np.arange(12, dtype=np.int32) % 11]
+    cfg = codesign.CodesignConfig(
+        n_specs=2, outer_pop=4, outer_generations=1, inner_pop=6,
+        inner_generations=1, char_n=1 << 9, seed=0,
+        workers=2, n_islands=1, migration_interval=0)
+    res = codesign.codesign_search(
+        _toy_accuracy, genome_len=12, cfg=cfg,
+        seed_candidates=[(compat, warm)])
+    with foundry.temporary_variants():
+        for sp in codesign.novel_specs(compat):
+            foundry.register(sp, n=1 << 9)
+        warm_objs = codesign.make_inner_objectives(_toy_accuracy)(
+            np.stack(warm))
+    assert nsga2.front_weakly_dominates(
+        res["archive"].front_objectives(), warm_objs)
+    warm_set = {tuple(map(float, o)) for o in warm_objs}
+    for p in res["archive"].points:
+        if tuple(p.objectives) in warm_set:
+            assert p.source == "warm", p
+
+
+def test_spec_memo_concurrent_ensure_single_sweep():
+    """Concurrent ensure() calls of the same spec coalesce to one sweep."""
+    memo = codesign.SpecMemo(1 << 8, 0)
+    spec = _dummy_spec("memo_race")
+    barrier = threading.Barrier(4)
+    errors = []
+
+    def worker():
+        try:
+            barrier.wait(timeout=30)
+            memo.ensure([spec])
+            memo.get(spec)
+        except Exception as e:  # pragma: no cover
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors, errors
+    assert memo.as_dict()["unique_specs"] == 1
+    assert memo.misses == 1  # exactly one thread paid the sweep
+    assert memo.hits == 3
+
+
+# ---------------------------------------------------------------------------
+# full study parity (real CNN evaluator) — nightly/CI-dedicated step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_codesign_study_async_parity_real_evaluator():
+    from repro.experiments import paper_cnn
+
+    params = paper_cnn.load_params()
+    common = dict(n_specs=3, outer_pop=4, outer_generations=1, inner_pop=6,
+                  inner_generations=1, n_images=32, char_n=1 << 9,
+                  out_name=None, log=lambda s: None)
+    r1 = paper_cnn.codesign_study(params, workers=1, n_islands=2, **common)
+    r2 = paper_cnn.codesign_study(params, workers=2, n_islands=2, **common)
+    assert schemes.variant_names() == schemes.SEED_VARIANTS
+
+    def sig(r):
+        return json.dumps({"front": r["front"], "archive": r["archive"]},
+                          sort_keys=True)
+
+    assert sig(r1) == sig(r2)
+    rep1 = codesign.replay_archive(r1["replay"])
+    rep2 = codesign.replay_archive(json.loads(json.dumps(r2["replay"])))
+    assert json.dumps(rep1.as_dict(), sort_keys=True) == \
+        json.dumps(rep2.as_dict(), sort_keys=True)
+    assert len(r2["async"]["islands"]) == 2
+    for row in r2["async"]["islands"]:
+        assert row["evals"] > 0
