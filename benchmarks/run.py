@@ -12,13 +12,16 @@ genomes/sec, wall-clock per generation, memo-cache hit rate, plus the
 2-device speedup), BENCH_engine.json (per-backend AM engine matmul/conv
 timings plus the batched bit-exact emulator rows), BENCH_foundry.json
 (variant-foundry synthesis/characterization throughput plus
-seed-vs-expanded alphabet evaluator rows) and BENCH_codesign.json
+seed-vs-expanded alphabet evaluator rows), BENCH_codesign.json
 (two-level placement+interleaving search: specs characterized/sec,
-inner-evals/sec, memo hit rates at every level).
+inner-evals/sec, memo hit rates at every level) and BENCH_serve.json
+(continuous-batching serving tier: batched vs per-slot tokens/sec,
+p50/p99 request latency, dispatch counts under mixed-tier load).
 
 --smoke runs the runner-sized subset the PR gate measures (engine,
-foundry, codesign, and the 1/2-device sharded-search sweep — written to
-BENCH_nsga2_sharded.json) and skips the paper-table sections.
+foundry, codesign, the 1/2-device sharded-search sweep — written to
+BENCH_nsga2_sharded.json — and the serving load bench) and skips the
+paper-table sections.
 """
 from __future__ import annotations
 
@@ -62,6 +65,15 @@ def smoke(out_dir: pathlib.Path) -> None:
     _write(out_dir, "BENCH_nsga2_sharded.json", _section(
         "NSGA-II sharded search — genomes/sec per host-device count",
         lambda: kernel_bench.nsga2_sharded_bench(device_counts=(1, 2))))
+    _write(out_dir, "BENCH_serve.json", _section(
+        "Serving — batched vs per-slot mixed-tier load (smoke)",
+        lambda: _serve_bench(requests=8, max_new=24, slots=4)))
+
+
+def _serve_bench(**kw):
+    from repro.launch import loadgen
+
+    return loadgen.bench(**kw)
 
 
 def full(out_dir: pathlib.Path) -> None:
@@ -94,6 +106,9 @@ def full(out_dir: pathlib.Path) -> None:
         if sharded_metrics is not None:
             nsga2_metrics["sharded"] = sharded_metrics
         _write(out_dir, "BENCH_nsga2.json", nsga2_metrics)
+    _write(out_dir, "BENCH_serve.json", _section(
+        "Serving — batched vs per-slot mixed-tier load",
+        lambda: _serve_bench(requests=12, max_new=24, slots=4)))
     _section("Roofline — dry-run derived, per (arch x shape x mesh)",
              roofline_summary.main)
 

@@ -70,6 +70,14 @@ class NumericsConfig:
                 else "surrogate")
         return cls(mode=mode, policy=policy, backend=backend, **kw)
 
+    @classmethod
+    def for_tier_set(cls, name: str, **kw) -> "NumericsConfig":
+        """Per-request tier routing (the serving path): policy `tiers:<name>`
+        resolves each batch row's slot-map policy from the tier set
+        registered via engine.register_tier_set, using the per-row tier
+        indices/positions bound by the ambient engine.row_tier_context."""
+        return cls(mode="surrogate", policy=f"tiers:{name}", **kw)
+
 
 EXACT = NumericsConfig(mode="exact")
 
@@ -137,6 +145,11 @@ def am_einsum(spec: str, x, w, *, cfg: NumericsConfig = EXACT, key=None):
         lead = x.shape[: x.ndim - n_c]
         y = am_dense(x.reshape(lead + (k,)), w.reshape(k, n), cfg=cfg, key=key)
         return y.reshape(lead + w.shape[n_c:])
+    if cfg.policy.startswith("tiers:"):
+        raise NotImplementedError(
+            f"per-row tier policies need dense-form projections; spec "
+            f"{spec!r} (batched/expert weights) has no per-request rows to "
+            "route — serve MoE expert einsums with a non-tier policy")
     if cfg.mode == "surrogate":
         assert key is not None
         k, n = w.shape[-2], w.shape[-1]

@@ -58,8 +58,10 @@ backends lives in kernels/ops.py (`choose_block`).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import threading
 from typing import Any, Callable
 
 import jax
@@ -101,6 +103,86 @@ def register_sequence(name: str, variant_ids, *, overwrite: bool = False) -> Non
 def list_sequences() -> tuple[str, ...]:
     """Names of registered `seq:<name>` policies, in registration order."""
     return tuple(_REGISTERED_SEQUENCES)
+
+
+# ---------------------------------------------------------------------------
+# Per-request tier routing (the serving path)
+# ---------------------------------------------------------------------------
+#
+# A tier set is an ordered tuple of slot-map policies (None = exact); policy
+# string `tiers:<name>` routes each batch ROW of a matmul through its own
+# tier's moment map inside one dispatch — the serving tier's accuracy/energy
+# SLO knob (exact for premium traffic, aggressive interleaves for bulk).
+# The per-row tier indices and request-local positions are ambient state
+# bound by `row_tier_context` around the consumer's decode call: they are
+# traced (B,) vectors, so slot/tier assignment never retraces the step.
+
+_TIER_SETS: dict[str, tuple[str | None, ...]] = {}
+
+
+def register_tier_set(name: str, policies, *, overwrite: bool = False) -> None:
+    """Register an ordered tier set under policy `tiers:<name>`.
+
+    `policies` is a sequence of per-tier slot-map policy strings (or None
+    for an exact tier: zero moments, zero variance — exact traffic rides
+    the same batched dispatch). Re-registering identical content is a
+    no-op; changing content requires overwrite=True (same contract as
+    register_sequence: a silent reroute would change every consumer
+    holding the `tiers:<name>` policy string).
+    """
+    policies = tuple(policies)
+    for p in policies:
+        if p is not None and not isinstance(p, str):
+            raise ValueError(f"tier policy must be a policy string or None, got {p!r}")
+        if isinstance(p, str) and p.startswith("tiers:"):
+            raise ValueError("tier sets cannot nest other tier sets")
+    if name in _TIER_SETS and _TIER_SETS[name] != policies and not overwrite:
+        raise ValueError(
+            f"tier set {name!r} already registered with different policies; "
+            "pass overwrite=True to replace it")
+    _TIER_SETS[name] = policies
+
+
+def tier_set(name: str) -> tuple[str | None, ...]:
+    try:
+        return _TIER_SETS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown tier set {name!r}; have {sorted(_TIER_SETS)}") from None
+
+
+def list_tier_sets() -> tuple[str, ...]:
+    return tuple(_TIER_SETS)
+
+
+class _RowTierState(threading.local):
+    def __init__(self):
+        self.stack: list[tuple[Any, Any]] = []
+
+
+_ROW_TIERS = _RowTierState()
+
+
+@contextlib.contextmanager
+def row_tier_context(tiers, pos):
+    """Bind per-row tier indices + request-local positions for `tiers:<name>`
+    policies. `tiers`/`pos`: (B,) int32, one entry per batch row; traced
+    values are the normal case — the context is read at trace time inside
+    the consumer's jitted step. Thread-local (the async co-design workers
+    trace concurrently)."""
+    _ROW_TIERS.stack.append((tiers, pos))
+    try:
+        yield
+    finally:
+        _ROW_TIERS.stack.pop()
+
+
+def _current_row_tiers():
+    if not _ROW_TIERS.stack:
+        raise ValueError(
+            "policy 'tiers:<name>' needs an active engine.row_tier_context "
+            "binding per-row tier indices and request-local positions")
+    return _ROW_TIERS.stack[-1]
 
 
 # ---------------------------------------------------------------------------
@@ -721,7 +803,14 @@ class AMEngine:
         backends and restored afterwards. With a population slot_map, a
         3-D x whose leading dim equals P is treated as per-genome input
         (override with x_population=True/False when ambiguous).
+
+        A `tiers:<name>` slot_map takes the per-row tier-routed path
+        instead (see register_tier_set / row_tier_context).
         """
+        if isinstance(slot_map, str) and slot_map.startswith("tiers:"):
+            return self._row_tier_matmul(
+                x, w, slot_map.split(":", 1)[1], key=key,
+                return_moments=return_moments)
         k, n = w.shape
         cmap = canonical_matmul_map(
             slot_map, k, n, tile_k=self.tile_k, tile_n=self.tile_n
@@ -750,6 +839,54 @@ class AMEngine:
             return fix(out[0]), fix(out[1])
         return fix(out)
 
+    def _row_tier_matmul(self, x, w, set_name: str, *, key,
+                         return_moments: bool = False):
+        """Per-row tier-routed surrogate matmul (the serving path).
+
+        Row r computes the surrogate moments under its own tier's folded
+        weights: mean_r = x_r @ (w (1 + mu_t)), var_r = x_r^2 @ (w^2 sg_t^2)
+        with t = tiers[r] from the ambient row_tier_context — one gather +
+        two batched contractions for the whole mixed-tier batch, no per-tier
+        dispatch. A None-policy tier has all-zero moments: its rows come out
+        exact-mean, zero-variance, so premium traffic shares the dispatch.
+
+        Noise is drawn PER ROW from fold_in(key, pos[r]) — a function of the
+        call key and the request-local position only, never the row/slot
+        index or the global schedule. That extends the CRN isolation
+        contract to continuous batching: a request's noise realization is
+        identical in any slot, under any neighbors, at any admission time.
+        """
+        policies = tier_set(set_name)
+        tiers, pos = _current_row_tiers()
+        k, n = w.shape
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, k)
+        rows = int(tiers.shape[0])
+        if x2.shape[0] != rows:
+            raise ValueError(
+                f"tiers:{set_name}: x has {x2.shape[0]} rows (lead dims "
+                f"{lead}) but the row_tier_context binds {rows}; per-row "
+                "tier routing needs exactly one matmul row per served slot")
+        vids = np.stack([
+            canonical_matmul_map(p, k, n, tile_k=self.tile_k,
+                                 tile_n=self.tile_n).vids
+            for p in policies])  # (T, K, N) concrete
+        wm, wv = fold_matmul_weights(
+            w, CanonicalMap(vids, True), noise_scale=self.noise_scale)
+        wm_r = jnp.asarray(wm)[tiers]  # (B, K, N): each row's folded weights
+        wv_r = jnp.asarray(wv)[tiers]
+        xf = x2.astype(jnp.float32)
+        mean = jnp.einsum("bk,bkn->bn", xf, wm_r)
+        var = jnp.einsum("bk,bkn->bn", xf * xf, wv_r)
+        if return_moments:
+            return mean.reshape(lead + (n,)), var.reshape(lead + (n,))
+        _require_key(key, f"tiers:{set_name}")
+        zkeys = jax.vmap(lambda p_: jax.random.fold_in(key, p_))(pos)
+        z = jax.vmap(lambda kk: surrogate.crn_normal(kk, (n,), jnp.float32))(
+            zkeys)
+        out = mean + z * jnp.sqrt(jnp.maximum(var, 0.0))
+        return out.reshape(lead + (n,))
+
     def conv2d(self, x, w, slot_map=None, *, backend=None, key=None,
                return_moments=False, x_population=None):
         """NHWC VALID stride-1 conv2d under AM numerics.
@@ -757,6 +894,10 @@ class AMEngine:
         x: (B, H, W, Cin) — or (P, B, H, W, Cin) with a population slot_map;
         w: (F, kh, kw, Cin); slot_map canonicalizes to (P?, F, kh, kw).
         """
+        if isinstance(slot_map, str) and slot_map.startswith("tiers:"):
+            raise NotImplementedError(
+                "per-row tier policies are a serving (matmul) feature; conv "
+                "has no per-request batch rows to route")
         f, kh, kw, cin = w.shape
         cmap = canonical_conv_map(slot_map, f, kh, kw)
         pop_x = self._resolve_pop_x(x, cmap, 4, x_population)

@@ -1,0 +1,131 @@
+"""Mixed-tier load generator for the continuous-batching serving tier.
+
+Drives a deterministic stream of requests — random prompt lengths, tiers
+cycled across the DEFAULT_TIER_POLICIES menu — through launch/serve.Server
+and measures throughput (generated tokens/sec), request latency (p50/p99
+from submit to finish), and dispatch counts. `bench()` runs the same load
+twice, batched vs per_slot (the one-dispatch-per-busy-row reference with
+token-at-a-time prefill — the pre-batching serving loop's schedule), and
+reports the speedup; benchmarks/run.py writes it to BENCH_serve.json where
+check_regression.py gates `serve.tokens_per_sec` and the batched-over-
+per_slot speedup floor.
+
+  PYTHONPATH=src python -m repro.launch.loadgen --out artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.launch import mesh as meshlib
+from repro.launch.serve import DEFAULT_TIER_POLICIES, Request, Server
+from repro.models import registry as R
+
+
+def make_requests(cfg, n: int, max_new: int, seed: int = 0,
+                  tiers=tuple(DEFAULT_TIER_POLICIES),
+                  prompt_lens=(3, 5, 8)) -> list[Request]:
+    """Deterministic mixed-tier request stream (tiers cycle round-robin)."""
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab,
+                                    prompt_lens[i % len(prompt_lens)]
+                                    ).astype(np.int32),
+                max_new=max_new, tier=tiers[i % len(tiers)])
+        for i in range(n)
+    ]
+
+
+def run_load(server: Server, requests: list[Request]) -> dict:
+    """Submit all requests up front, drain the server, measure."""
+    t0 = time.perf_counter()
+    for r in requests:
+        server.submit(r)
+    finished = server.run()
+    wall = time.perf_counter() - t0
+    done = [r for r in finished if r.status == "done"]
+    lat = np.array([r.latency for r in done]) if done else np.zeros(1)
+    return {
+        "wall_s": wall,
+        "tokens_per_sec": server.stats["generated"] / max(wall, 1e-9),
+        "generated": server.stats["generated"],
+        "dispatches": server.stats["dispatches"],
+        "decode_ticks": server.stats["decode_ticks"],
+        "prefill_rounds": server.stats["prefill_rounds"],
+        "completed": len(done),
+        "rejected": sum(r.status == "rejected" for r in finished),
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+    }
+
+
+def _server(cfg, mesh, mode: str, slots: int, ctx: int, tiers) -> Server:
+    # per_slot is the pre-batching baseline: one dispatch per busy slot,
+    # token-at-a-time prefill (prefill_chunk=1).
+    chunk = 4 if mode == "batched" else 1
+    return Server(cfg, mesh, slots=slots, ctx=ctx, tiers=tiers, mode=mode,
+                  prefill_chunk=chunk)
+
+
+def bench(arch: str = "xlstm-125m", requests: int = 8, max_new: int = 24,
+          slots: int = 4, ctx: int = 64, seed: int = 0) -> dict:
+    """Batched vs per_slot under identical mixed-tier load. One warmup pass
+    per mode pays compilation before the timed pass."""
+    cfg = R.get(arch).smoke
+    mesh = meshlib.make_host_mesh()
+    tiers = dict(DEFAULT_TIER_POLICIES)
+    out: dict = {"config": {"arch": arch, "requests": requests,
+                            "max_new": max_new, "slots": slots, "ctx": ctx,
+                            "tiers": sorted(tiers)}}
+    for mode in ("batched", "per_slot"):
+        sv = _server(cfg, mesh, mode, slots, ctx, tiers)
+        # Warm up THIS instance (the jitted step caches per Server), then
+        # zero the counters for the timed pass.
+        run_load(sv, make_requests(cfg, min(3, requests), 2, seed=seed + 1))
+        sv.reset_metrics()
+        out[mode] = run_load(sv, make_requests(cfg, requests, max_new, seed=seed))
+    speedup = out["batched"]["tokens_per_sec"] / max(
+        out["per_slot"]["tokens_per_sec"], 1e-9)
+    out["serve"] = {
+        "tokens_per_sec": out["batched"]["tokens_per_sec"],
+        "speedup_batched_vs_per_slot": speedup,
+        "p50_latency_s": out["batched"]["p50_latency_s"],
+        "p99_latency_s": out["batched"]["p99_latency_s"],
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="Mixed-tier serving load benchmark")
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--ctx", type=int, default=64)
+    ap.add_argument("--out", default=None,
+                    help="directory to write BENCH_serve.json into")
+    args = ap.parse_args()
+    res = bench(arch=args.arch, requests=args.requests, max_new=args.max_new,
+                slots=args.slots, ctx=args.ctx)
+    s = res["serve"]
+    print(f"[loadgen] batched {s['tokens_per_sec']:.1f} tok/s "
+          f"({res['batched']['dispatches']} dispatches) vs per_slot "
+          f"{res['per_slot']['tokens_per_sec']:.1f} tok/s "
+          f"({res['per_slot']['dispatches']} dispatches) -> "
+          f"{s['speedup_batched_vs_per_slot']:.2f}x; "
+          f"p50 {s['p50_latency_s'] * 1e3:.0f}ms p99 {s['p99_latency_s'] * 1e3:.0f}ms")
+    if args.out:
+        out_dir = pathlib.Path(args.out)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        path = out_dir / "BENCH_serve.json"
+        path.write_text(json.dumps(res, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

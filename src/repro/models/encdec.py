@@ -199,7 +199,8 @@ def precompute_cross_cache(params, memory, cfg):
 
 
 def decode_step(params, cache, tokens, pos, cfg, key=None):
-    """One decoder token across all layers. tokens (B,), pos scalar."""
+    """One decoder token across all layers. tokens (B,); pos scalar or (B,)
+    per-row positions (see transformer.decode_step)."""
     x = T.embed_tokens(params, tokens[:, None], cfg)
 
     def body(carry, xs):

@@ -234,23 +234,36 @@ def attention_cache_axes():
 
 
 def attention_decode(p, cache, x_t, pos, cfg, kind: str, key=None):
-    """One-token decode. x_t: (B, 1, d); pos: scalar int32 (current index).
+    """One-token decode. x_t: (B, 1, d); pos: scalar int32 (one position
+    shared by the whole batch) OR (B,) int32 (per-row positions — the
+    continuous-batching server, where each slot decodes at its own offset).
 
     Returns (out (B, 1, d), new_cache). The cache is rolling for windowed
-    kinds (slot = pos % window) and linear otherwise.
+    kinds (slot = pos % window) and linear otherwise. Every op here is
+    row-local — a row's output and cache slice depend only on that row's
+    inputs — which is what lets the server batch per-slot steps into one
+    dispatch without coupling requests.
     """
     b = x_t.shape[0]
     q, k, v = _qkv(p, x_t, cfg, key)
-    posv = jnp.full((1,), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    posv = pos[:, None] if per_row else jnp.full((1,), pos, jnp.int32)
     q = rope(q, posv, cfg.rope_theta)
     k = rope(k, posv, cfg.rope_theta)
 
     s_cache = cache["k"].shape[1]
     slot = jnp.where(s_cache > 0, pos % s_cache, 0)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
+    if per_row:
+        upd = jax.vmap(
+            lambda c, t, s: jax.lax.dynamic_update_slice(c, t, (s, 0, 0)))
+        ck = upd(cache["k"], k.astype(cache["k"].dtype), slot)
+        cv = upd(cache["v"], v.astype(cache["v"].dtype), slot)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
     ck = shd.logical_constraint(ck, ("batch", "seq_kv", "kv_heads", "head_dim"))
     cv = shd.logical_constraint(cv, ("batch", "seq_kv", "kv_heads", "head_dim"))
 
@@ -262,20 +275,24 @@ def attention_decode(p, cache, x_t, pos, cfg, kind: str, key=None):
     s = jnp.einsum("bqgrd,bkgd->bqgrk", qf.astype(ck.dtype), ck,
                    preferred_element_type=jnp.float32)
 
-    # Valid-key mask: absolute position of each cache slot.
+    # Valid-key mask: absolute position of each cache slot. pos_b broadcasts
+    # against idx to (s_cache,) for a shared position, (B, s_cache) per row.
     idx = jnp.arange(s_cache)
+    pos_b = pos[:, None] if per_row else pos
     window = _window_for(cfg, kind)
     if window:
         # slot i holds absolute position: the latest p <= pos with p % s == i
-        abs_pos = pos - ((pos - idx) % s_cache)
-        valid = (abs_pos >= 0) & (abs_pos <= pos)
+        abs_pos = pos_b - ((pos_b - idx) % s_cache)
+        valid = (abs_pos >= 0) & (abs_pos <= pos_b)
         if kind == "attn_chunked":
-            valid &= (abs_pos // window) == (pos // window)
+            valid &= (abs_pos // window) == (pos_b // window)
         else:
-            valid &= pos - abs_pos < window
+            valid &= pos_b - abs_pos < window
     else:
-        valid = idx <= pos
-    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+        valid = idx <= pos_b
+    vmask = (valid[:, None, None, None, :] if per_row
+             else valid[None, None, None, None, :])
+    s = jnp.where(vmask, s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bqgrk,bkgd->bqgrd", w.astype(cv.dtype), cv,
                      preferred_element_type=jnp.float32)

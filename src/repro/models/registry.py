@@ -142,6 +142,31 @@ def init_cache(cfg, batch: int, ctx: int):
     return transformer.init_cache(cfg, batch, ctx)
 
 
+def serve_position_limit(cfg: ModelConfig, ctx: int) -> int | None:
+    """Highest number of positions a `ctx`-slot decode cache can serve a
+    request correctly, or None when unbounded.
+
+    Full-attention mixers store one KV entry per position in a linear cache:
+    past `ctx` positions the rolling slot write (pos % ctx) overwrites live
+    entries while the `idx <= pos` validity mask still admits them — the
+    silent-overflow failure the server's admission control guards against.
+    Windowed kinds keep a rolling window-sized cache whose absolute-position
+    mask is correct at any pos (provided the cache is at least window-sized),
+    and recurrent mixers (rglru/mlstm/slstm) carry O(1) state — both serve
+    unbounded positions. Encoder-decoder decoders use full self-attention.
+    """
+    if is_encdec(cfg):
+        return ctx
+    limit = None
+    for mixer, _ in cfg.pattern:
+        if mixer == "attn_full":
+            return ctx
+        if mixer in ("attn_sliding", "attn_local", "attn_chunked"):
+            if ctx < cfg.window:  # cache shorter than the window: it rolls
+                limit = ctx       # over live in-window entries past ctx
+    return limit
+
+
 def cache_batch_axes(cfg):
     """Pytree matching the decode cache with each leaf's batch-axis index
     (-1 for leaves without a batch axis). Derived from the same logical-axis

@@ -393,7 +393,13 @@ def _apply_layer_decode(p, cache, x, pos, cfg, mixer: str, ffn: str, key):
 
 def decode_step(params, cache, tokens, pos, cfg: ModelConfig, key=None,
                 embeds=None):
-    """One decode step: tokens (B,) i32, pos scalar i32 -> (logits (B,V), cache).
+    """One decode step: tokens (B,) i32 -> (logits (B,V), cache).
+
+    `pos` is a scalar i32 (one position shared by the batch) or a (B,) i32
+    vector of per-row positions (continuous batching: each slot at its own
+    offset). Only attention consumes pos — recurrent mixers carry state —
+    and every decode op is row-local, so a row's logits/cache slice depend
+    only on that row's token, position and cache.
 
     `embeds` (B, d) overrides the token embedding — the VLM/audio prefill
     path feeds precomputed patch/frame embeddings through the same cache.
