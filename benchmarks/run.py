@@ -50,7 +50,13 @@ def _write(out_dir: pathlib.Path, name: str, metrics) -> None:
 
 
 def smoke(out_dir: pathlib.Path) -> None:
-    """The PR-gate subset: what the CI runner can measure in minutes."""
+    """The PR-gate subset: what the CI runner can measure in minutes.
+
+    The codesign and serving sections run traced (see _codesign_bench_traced
+    and loadgen.bench's obs pass) and drop trace_*.json + metrics_*.json
+    Perfetto-loadable artifacts next to the BENCH files; CI validates them
+    against the Chrome trace-event schema and uploads them.
+    """
     from benchmarks import kernel_bench
 
     _write(out_dir, "BENCH_engine.json", _section(
@@ -61,19 +67,36 @@ def smoke(out_dir: pathlib.Path) -> None:
         kernel_bench.foundry_bench))
     _write(out_dir, "BENCH_codesign.json", _section(
         "Codesign — two-level placement+interleaving search throughput",
-        kernel_bench.codesign_bench))
+        lambda: _codesign_bench_traced(out_dir)))
     _write(out_dir, "BENCH_nsga2_sharded.json", _section(
         "NSGA-II sharded search — genomes/sec per host-device count",
         lambda: kernel_bench.nsga2_sharded_bench(device_counts=(1, 2))))
     _write(out_dir, "BENCH_serve.json", _section(
         "Serving — batched vs per-slot mixed-tier load (smoke)",
-        lambda: _serve_bench(requests=8, max_new=24, slots=4)))
+        lambda: _serve_bench(requests=8, max_new=24, slots=4,
+                             out_dir=out_dir)))
 
 
 def _serve_bench(**kw):
     from repro.launch import loadgen
 
     return loadgen.bench(**kw)
+
+
+def _codesign_bench_traced(out_dir: pathlib.Path):
+    """codesign_bench with observability forced on, exporting the sweep's
+    spans (characterization waves, per-candidate evals, SpecMemo traffic)
+    as trace_codesign.json + metrics_codesign.json."""
+    from benchmarks import kernel_bench
+    from repro import obs
+
+    obs.trace.reset()
+    obs.metrics.reset()
+    with obs.enabled_scope(True):
+        res = kernel_bench.codesign_bench()
+        obs.export_trace(out_dir / "trace_codesign.json")
+        obs.export_metrics(out_dir / "metrics_codesign.json")
+    return res
 
 
 def full(out_dir: pathlib.Path) -> None:
@@ -108,7 +131,8 @@ def full(out_dir: pathlib.Path) -> None:
         _write(out_dir, "BENCH_nsga2.json", nsga2_metrics)
     _write(out_dir, "BENCH_serve.json", _section(
         "Serving — batched vs per-slot mixed-tier load",
-        lambda: _serve_bench(requests=12, max_new=24, slots=4)))
+        lambda: _serve_bench(requests=12, max_new=24, slots=4,
+                             out_dir=out_dir)))
     _section("Roofline — dry-run derived, per (arch x shape x mesh)",
              roofline_summary.main)
 
@@ -120,7 +144,15 @@ def main(argv=None) -> None:
                     help="runner-sized PR-gate subset only")
     ap.add_argument("--out", type=pathlib.Path, default=default_out,
                     help="directory for BENCH_*.json (default: artifacts/)")
+    ap.add_argument("--obs", dest="obs", action="store_true", default=None,
+                    help="trace/meter every section, not just the dedicated "
+                         "traced passes (default: env REPRO_OBS)")
+    ap.add_argument("--no-obs", dest="obs", action="store_false")
     args = ap.parse_args(argv)
+    if args.obs is not None:
+        from repro import obs
+
+        obs.set_enabled(args.obs)
     if args.smoke:
         smoke(args.out)
     else:

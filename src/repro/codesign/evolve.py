@@ -89,6 +89,7 @@ from repro import foundry
 from repro.codesign import genome as cgenome
 from repro.codesign.archive import ArchivePoint, EliteArchive
 from repro.core import hwmodel, nsga2, schemes
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 
 REPLAY_FORMAT = "codesign-replay-v1"
 
@@ -164,6 +165,7 @@ class SpecMemo:
         measures real memoization benefit (specs shared across candidates/
         generations), not lookups of entries this same call just created.
         """
+        my_hits = my_misses = 0
         first = True
         remaining = list(specs)
         while remaining:
@@ -176,14 +178,17 @@ class SpecMemo:
                     if kb in self._store or kb in todo:
                         if first:
                             self.hits += 1
+                            my_hits += 1
                     elif kb in self._inflight:
                         if first:
                             self.hits += 1  # another worker's sweep covers it
+                            my_hits += 1
                         wait_for.append(self._inflight[kb])
                         retry.append(s)
                     else:
                         if first:
                             self.misses += 1
+                            my_misses += 1
                         todo[kb] = s
                         self._inflight[kb] = threading.Event()
             first = False
@@ -200,6 +205,7 @@ class SpecMemo:
                         ev.set()
                     raise
                 dt = time.time() - t0
+                obs_metrics.observe("codesign.char_seconds", dt)
                 with self._lock:
                     self.char_seconds += dt
                     evs = []
@@ -212,6 +218,12 @@ class SpecMemo:
             for ev in wait_for:
                 ev.wait()
             remaining = retry  # re-check: the producer may have failed
+        if my_hits:
+            obs_metrics.counter_inc("codesign.spec_memo", my_hits,
+                                    result="hit")
+        if my_misses:
+            obs_metrics.counter_inc("codesign.spec_memo", my_misses,
+                                    result="miss")
 
     def get(self, spec):
         """Uncounted lookup; self-heals (and counts a miss) if absent."""
@@ -413,7 +425,9 @@ def codesign_search(
                 "source": source,
             })
 
-        with foundry.registry_scope():
+        with obs_trace.span("codesign.candidate", key=hexkey[:10],
+                            island=island, n_specs=len(specs)), \
+                foundry.registry_scope():
             ids, hw_rows, moment_rows = [], {}, {}
             for sp in specs:
                 ch, hw = spec_memo.get(sp)
@@ -513,9 +527,11 @@ def codesign_search(
         def prepare_batch(genomes):
             # Generation-stacked characterization: one bit-level sweep over
             # every in-flight candidate's novelty, before workers touch it.
-            rows = [cgenome.repair(np.asarray(g)) for g in genomes]
-            spec_memo.ensure(
-                [sp for row in rows for sp in novel_specs(row)])
+            obs_metrics.counter_inc("codesign.waves")
+            with obs_trace.span("codesign.wave", size=len(genomes)):
+                rows = [cgenome.repair(np.asarray(g)) for g in genomes]
+                spec_memo.ensure(
+                    [sp for row in rows for sp in novel_specs(row)])
 
         def eval_async(genome, island):
             row = cgenome.repair(np.asarray(genome))

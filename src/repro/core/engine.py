@@ -62,6 +62,7 @@ import contextlib
 import dataclasses
 import functools
 import threading
+import time
 from typing import Any, Callable
 
 import jax
@@ -69,6 +70,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import interleave, schemes, surrogate
+from repro.obs import metrics as obs_metrics
+from repro.obs.config import enabled as _obs_enabled
 
 BACKEND_NAMES = (
     "exact",
@@ -212,6 +215,13 @@ def _policy_sequence(policy: str, n: int) -> np.ndarray:
         if seq.size < n:  # tile the registered sequence to cover the grid
             seq = np.resize(seq, n)
         return seq[:n].copy()
+    if _obs_enabled():
+        before = _static_policy_sequence.cache_info().hits
+        out = _static_policy_sequence(policy, n)
+        hit = _static_policy_sequence.cache_info().hits > before
+        obs_metrics.counter_inc("engine.policy_cache",
+                                result="hit" if hit else "miss")
+        return out
     return _static_policy_sequence(policy, n)
 
 
@@ -345,7 +355,9 @@ def fold_conv_gemm_weights(
     Host (np) weights fold on the host — bitwise-stable, the population
     evaluator's contract; traced weights (w as a jit argument) fold in-graph.
     """
-    if isinstance(w, jax.core.Tracer):
+    traced = isinstance(w, jax.core.Tracer)
+    t0 = time.perf_counter() if _obs_enabled() and not traced else None
+    if traced:
         w = w.astype(jnp.float32)
     else:
         w = np.asarray(w, np.float32)
@@ -367,6 +379,9 @@ def fold_conv_gemm_weights(
     wv = (wf * wf)[None] * (sg_c * sg_c)
     if not maps.pop:
         wm, wv = wm[0], wv[0]
+    if t0 is not None:  # host folds only: in-graph folds time as compilation
+        obs_metrics.observe("engine.fold_seconds", time.perf_counter() - t0,
+                            op="conv")
     return wm.astype(np.float32), wv.astype(np.float32)
 
 
@@ -380,9 +395,11 @@ def fold_matmul_weights(w, maps: CanonicalMap, *, noise_scale: float = 1.0):
     fold on the host — once per engine call, not per jit invocation; traced
     weights (w as a jit argument) fold in-graph.
     """
+    traced = isinstance(w, jax.core.Tracer)
+    t0 = time.perf_counter() if _obs_enabled() and not traced else None
     vids = maps.vids if maps.pop else maps.vids[None]
     mu, sg = moment_maps(vids, noise_scale)  # np f32 (P, K, N)
-    if isinstance(w, jax.core.Tracer):
+    if traced:
         wf = w.astype(jnp.float32)
         wm = wf[None] * (1.0 + jnp.asarray(mu))
         wv = (wf * wf)[None] * jnp.asarray(sg * sg)
@@ -392,6 +409,9 @@ def fold_matmul_weights(w, maps: CanonicalMap, *, noise_scale: float = 1.0):
         wv = ((wf * wf)[None] * (sg * sg)).astype(np.float32)
     if not maps.pop:
         wm, wv = wm[0], wv[0]
+    if t0 is not None:  # host folds only: in-graph folds time as compilation
+        obs_metrics.observe("engine.fold_seconds", time.perf_counter() - t0,
+                            op="matmul")
     return wm, wv
 
 
@@ -824,6 +844,7 @@ class AMEngine:
             has_map=slot_map is not None and bool(np.any(cmap.vids)),
             work=m * k * n * cmap.population,
         )
+        obs_metrics.counter_inc("engine.dispatch", op="matmul", backend=name)
         ctx = _Ctx(self, block, return_moments, base_ndim=2, pop_x=pop_x)
         if self._pop_shards(name, cmap):
             out = self._sharded_matmul(name, ctx, x2, w, cmap, key)
@@ -908,6 +929,7 @@ class AMEngine:
             has_map=slot_map is not None and bool(np.any(cmap.vids)),
             work=int(x.shape[-4]) * ho * wo * f * kh * kw * cin * cmap.population,
         )
+        obs_metrics.counter_inc("engine.dispatch", op="conv2d", backend=name)
         ctx = _Ctx(self, None, return_moments, base_ndim=4, pop_x=pop_x)
         if self._pop_shards(name, cmap):
             return self._sharded_conv2d(name, ctx, x, w, cmap, key)

@@ -29,6 +29,9 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs.metrics import stats_dataclass
+
 
 @dataclasses.dataclass
 class Individual:
@@ -38,9 +41,20 @@ class Individual:
     crowding: float = 0.0
 
 
+@stats_dataclass(dict_keys=(
+    "batch_calls", "genomes_requested", "genomes_scored", "cache_hits",
+    "cache_hit_rate",
+))
 @dataclasses.dataclass
 class EvalStats:
-    """Telemetry from the batched, memoized evaluation pipeline."""
+    """Telemetry from the batched, memoized evaluation pipeline.
+
+    `as_dict` (public JSON shape, rate included in order) and `merge`
+    (async workers keep per-task EvalStats so concurrent updates never
+    race; the scheduler merges them on incorporation) both derive from
+    obs.metrics.stats_dataclass — one declaration, no hand-rolled
+    plumbing to drift.
+    """
 
     batch_calls: int = 0  # objectives_batch invocations (<= 1 + generations)
     genomes_requested: int = 0  # genomes the optimizer asked to score
@@ -51,25 +65,12 @@ class EvalStats:
     def cache_hit_rate(self) -> float:
         return self.cache_hits / self.genomes_requested if self.genomes_requested else 0.0
 
-    def as_dict(self) -> dict:
-        return {
-            "batch_calls": self.batch_calls,
-            "genomes_requested": self.genomes_requested,
-            "genomes_scored": self.genomes_scored,
-            "cache_hits": self.cache_hits,
-            "cache_hit_rate": self.cache_hit_rate,
-        }
 
-    def merge(self, other: "EvalStats") -> None:
-        """Fold another telemetry record into this one (async workers keep
-        per-task EvalStats so concurrent updates never race; the scheduler
-        merges them on incorporation)."""
-        self.batch_calls += other.batch_calls
-        self.genomes_requested += other.genomes_requested
-        self.genomes_scored += other.genomes_scored
-        self.cache_hits += other.cache_hits
-
-
+@stats_dataclass(dict_keys=(
+    "island", "evals", "cache_hits", "cache_hit_rate", "eval_seconds",
+    "queue_wait_seconds", "migration_wait_seconds", "migrants_in",
+    "migrants_out",
+), merge_skip=("island",))
 @dataclasses.dataclass
 class IslandStats:
     """Per-island telemetry from the asynchronous island-model optimizer."""
@@ -86,19 +87,6 @@ class IslandStats:
     @property
     def cache_hit_rate(self) -> float:
         return self.cache_hits / self.evals if self.evals else 0.0
-
-    def as_dict(self) -> dict:
-        return {
-            "island": self.island,
-            "evals": self.evals,
-            "cache_hits": self.cache_hits,
-            "cache_hit_rate": self.cache_hit_rate,
-            "eval_seconds": self.eval_seconds,
-            "queue_wait_seconds": self.queue_wait_seconds,
-            "migration_wait_seconds": self.migration_wait_seconds,
-            "migrants_in": self.migrants_in,
-            "migrants_out": self.migrants_out,
-        }
 
 
 def _alphabet_salt() -> bytes:
@@ -196,12 +184,15 @@ class BatchEvaluator:
             )
         self.stats.batch_calls += 1
         self.stats.genomes_scored += p
+        obs_metrics.counter_inc("nsga2.batch_calls")
+        obs_metrics.counter_inc("nsga2.genomes_scored", p)
         return objs[:p]
 
     def __call__(self, genomes: Sequence[np.ndarray]) -> list[np.ndarray]:
         """Score a list of genomes; returns per-genome objective vectors."""
         genomes = [np.asarray(g, np.int32) for g in genomes]
         self.stats.genomes_requested += len(genomes)
+        obs_metrics.counter_inc("nsga2.genomes_requested", len(genomes))
 
         if not self._memoize:
             return list(self._score(np.stack(genomes).astype(np.int32)))
@@ -213,6 +204,7 @@ class BatchEvaluator:
         for g, k in zip(genomes, keys):
             if k in self._cache or k in pending:
                 self.stats.cache_hits += 1
+                obs_metrics.counter_inc("nsga2.cache_hits")
                 continue
             pending.add(k)
             todo_keys.append(k)
@@ -777,6 +769,9 @@ def optimize_async(
             if to_dispatch:
                 dispatch_waves += 1
                 dispatched_total += len(to_dispatch)
+                obs_metrics.counter_inc("nsga2.async.dispatch_waves")
+                obs_metrics.counter_inc("nsga2.async.dispatched",
+                                        len(to_dispatch))
                 if prepare_batch is not None:
                     prepare_batch([t.genome for t in to_dispatch])
                 for t in to_dispatch:
@@ -835,15 +830,23 @@ def optimize_async(
         log(f"async: {total_tasks} tasks ({dispatched_total} evaluated, "
             f"{total_tasks - dispatched_total} memo) on {n_workers} workers "
             f"x {n_islands} islands in {elapsed:.2f}s")
+    # Queue-wait fraction of dispatched-task turnaround. A run can dispatch
+    # zero busy time — every steady task a memo hit (tiny pops, duplicate
+    # genomes), or sub-resolution turnarounds summing to exactly 0.0 — and
+    # 0/0 here is a ZeroDivisionError/NaN, so the zero case is pinned to
+    # 0.0 (regression-tested in tests/test_obs.py).
+    queue_wait = sum(i.stats.queue_wait_seconds for i in islands)
+    queue_wait_fraction = (
+        queue_wait / dispatched_busy if dispatched_busy > 0.0 else 0.0
+    )
+    obs_metrics.gauge_set("nsga2.async.queue_wait_fraction",
+                          queue_wait_fraction)
     return {
         "front": front,
         "islands": island_rows,
         "events": events,
         "elapsed": elapsed,
-        "queue_wait_fraction": (
-            sum(i.stats.queue_wait_seconds for i in islands) / dispatched_busy
-            if dispatched_busy else 0.0
-        ),
+        "queue_wait_fraction": queue_wait_fraction,
         "migration_wait_seconds": sum(
             i.stats.migration_wait_seconds for i in islands),
     }

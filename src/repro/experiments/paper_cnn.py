@@ -16,6 +16,7 @@ tables without re-running the (hour-scale) optimization.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import json
 import pathlib
@@ -27,6 +28,7 @@ import numpy as np
 from repro.core import engine, hwmodel, interleave, nsga2, schemes
 from repro.data import cifar_like
 from repro.models import cnn
+from repro.obs import config as obs_config, trace as obs_trace, watchdog
 
 ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts"
 PARAMS_FILE = ARTIFACTS / "paper_cnn_params.npz"
@@ -34,6 +36,13 @@ PARAMS_FILE = ARTIFACTS / "paper_cnn_params.npz"
 # The paper's hardware accounting: per-multiplier metrics scale by the slot
 # count; conv slots here = 198 (22 filters x 9 coefficients).
 N_SLOTS = cnn.N_SLOTS
+
+
+def _obs_scope(obs: bool | None):
+    """Study-level observability override: None inherits REPRO_OBS."""
+    if obs is None:
+        return contextlib.nullcontext()
+    return obs_config.enabled_scope(obs)
 
 
 def load_params():
@@ -250,16 +259,20 @@ def make_batched_evaluator(
             )
             return total
 
+        # One watchdog record per lru-cached block count; name lookups sum
+        # them, so the budget is "distinct population shapes", not calls.
         if mesh is None:
-            return jax.jit(n_correct)
+            return watchdog.watch_jit(
+                n_correct, name="paper_cnn.batched_evaluator")
         from jax.sharding import PartitionSpec as P
 
         from repro.parallel import sharding as shd
 
         sp = P(pop_axis_name)
-        return jax.jit(shd.shard_map(
+        return watchdog.watch_jit(shd.shard_map(
             n_correct, mesh=mesh, in_specs=(sp, sp, sp, sp, P()),
-            out_specs=sp, check_vma=False))
+            out_specs=sp, check_vma=False),
+            name="paper_cnn.batched_evaluator")
 
     def evaluate(genomes: np.ndarray, key) -> np.ndarray:
         g = np.atleast_2d(np.asarray(genomes, np.int32))
@@ -335,6 +348,7 @@ def nsga_study(
     position_agnostic: bool | None = None,
     mesh=None,
     initial_genomes=None,
+    obs: bool | None = None,
     log=print,
 ):
     """NSGA-II over 198-slot sequences with a K-variant alphabet.
@@ -400,19 +414,21 @@ def nsga_study(
         objective_kwargs = dict(objective_fn=objectives)
 
     t0 = time.time()
-    front = nsga2.optimize(
-        genome_len=N_SLOTS,
-        alphabet=alphabet,
-        pop_size=pop_size,
-        generations=generations,
-        seed=seed,
-        position_agnostic=position_agnostic,
-        mesh=mesh,
-        initial_genomes=initial_genomes,
-        stats=stats,
-        log=(lambda s: log(f"  [K={k}] {s}")) if log else None,
-        **objective_kwargs,
-    )
+    with _obs_scope(obs), obs_trace.span(
+            "study.nsga", k=k, pop=pop_size, generations=generations):
+        front = nsga2.optimize(
+            genome_len=N_SLOTS,
+            alphabet=alphabet,
+            pop_size=pop_size,
+            generations=generations,
+            seed=seed,
+            position_agnostic=position_agnostic,
+            mesh=mesh,
+            initial_genomes=initial_genomes,
+            stats=stats,
+            log=(lambda s: log(f"  [K={k}] {s}")) if log else None,
+            **objective_kwargs,
+        )
     seconds = time.time() - t0
     knee = nsga2.knee_point(front)
     return {
@@ -474,6 +490,7 @@ def foundry_study(
     char_n: int = 1 << 15,
     mesh=None,
     out_name: str | None = "foundry_study.json",
+    obs: bool | None = None,
     log=print,
 ):
     """Expanded-alphabet interleaving search over foundry variants.
@@ -513,7 +530,7 @@ def foundry_study(
     baseline = nsga_study(
         params, len(base_alphabet), alphabet=base_alphabet, n_images=n_images,
         pop_size=pop_size, generations=generations, seed=seed,
-        noise_scale=noise_scale, mesh=mesh, log=log,
+        noise_scale=noise_scale, mesh=mesh, obs=obs, log=log,
     )
 
     n_new = max(k_target - n_seed, 0)
@@ -524,8 +541,10 @@ def foundry_study(
     else:
         specs = list(foundry.default_family(n_new))[:n_new]
     log(f"== registering {len(specs)} foundry variants (char n={char_n}) ==")
-    regs = foundry.register_family(specs, n=char_n, seed=seed, overwrite=True,
-                                   log=log)
+    with _obs_scope(obs), obs_trace.span(
+            "study.foundry.register", n=len(specs), char_n=char_n):
+        regs = foundry.register_family(specs, n=char_n, seed=seed,
+                                       overwrite=True, log=log)
 
     expanded_alphabet = list(range(len(schemes.VARIANTS)))
     k_expanded = len(expanded_alphabet)
@@ -535,7 +554,8 @@ def foundry_study(
     expanded = nsga_study(
         params, k_expanded, alphabet=expanded_alphabet, n_images=n_images,
         pop_size=pop_size, generations=generations, seed=seed,
-        noise_scale=noise_scale, mesh=mesh, initial_genomes=warm, log=log,
+        noise_scale=noise_scale, mesh=mesh, initial_genomes=warm, obs=obs,
+        log=log,
     )
 
     base_objs = np.array([ind["objectives"] for ind in baseline["front"]])
@@ -607,6 +627,7 @@ def codesign_study(
     async_window: int = 2,
     baseline_name: str | None = "foundry_study.json",
     out_name: str | None = "codesign_study.json",
+    obs: bool | None = None,
     log=print,
 ):
     """Two-level co-design: search the placement space AND the interleaving.
@@ -742,11 +763,14 @@ def codesign_study(
         f"{inner_pop}x{inner_generations}, n_images={n_images}"
         + (f", async workers={workers} islands={n_islands}"
            if workers >= 1 else "") + ") ==")
-    res = codesign.codesign_search(
-        accuracy_batch, genome_len=N_SLOTS, cfg=cfg,
-        seed_candidates=[(compat, warm)] if compat is not None else (),
-        mesh=mesh, log=log, **island_kwargs,
-    )
+    with _obs_scope(obs), obs_trace.span(
+            "study.codesign", outer_pop=outer_pop,
+            outer_generations=outer_generations, workers=workers):
+        res = codesign.codesign_search(
+            accuracy_batch, genome_len=N_SLOTS, cfg=cfg,
+            seed_candidates=[(compat, warm)] if compat is not None else (),
+            mesh=mesh, log=log, **island_kwargs,
+        )
     archive = res["archive"]
 
     search_dominates = None
@@ -826,6 +850,7 @@ def run_all(
     generations: int = 15,
     noise_scale: float = 1.0,
     out_name: str = "paper_cnn_results.json",
+    obs: bool | None = None,
     log=print,
 ):
     """Full paper Sec. III pipeline; writes artifacts/<out_name>."""
@@ -845,7 +870,7 @@ def run_all(
         res = nsga_study(
             params, k, ranking=ranking, n_images=n_images_inner,
             pop_size=pop_size, generations=generations, noise_scale=noise_scale,
-            log=log,
+            obs=obs, log=log,
         )
         results["nsga"][str(k)] = res
         log(f"== displacement K={k} ==")

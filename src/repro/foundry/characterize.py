@@ -21,6 +21,7 @@ import functools
 import numpy as np
 
 from repro.core import errors, fp32_mul, schemes
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 
 import repro.foundry.spec as fspec
 
@@ -210,14 +211,17 @@ def characterize_batch(
     an, bn = _normal_operands(n, seed)
     exact_n = _normal_exact(n, seed)
 
+    obs_metrics.counter_inc("foundry.characterize.variants", v)
     parts_w, parts_n = [], []
-    for g0 in range(0, v, _MAX_STACK):
-        group = maps[g0 : g0 + _MAX_STACK]
-        ck = chunk if chunk is not None else max(
-            1 << 10, (1 << 15) // group.shape[0]
-        )
-        parts_w.append(_multiply_stacked(a, b, group, ck))
-        parts_n.append(_multiply_stacked(an, bn, group, ck))
+    with obs_trace.span("foundry.characterize_batch", variants=v, n=n,
+                        groups=-(-v // _MAX_STACK)):
+        for g0 in range(0, v, _MAX_STACK):
+            group = maps[g0 : g0 + _MAX_STACK]
+            ck = chunk if chunk is not None else max(
+                1 << 10, (1 << 15) // group.shape[0]
+            )
+            parts_w.append(_multiply_stacked(a, b, group, ck))
+            parts_n.append(_multiply_stacked(an, bn, group, ck))
     approx = np.concatenate(parts_w)  # (V, n)
     approx_n = np.concatenate(parts_n)
     ok = np.isfinite(exact_n) & (exact_n != 0)

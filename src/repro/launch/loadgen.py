@@ -21,9 +21,11 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.launch import mesh as meshlib
 from repro.launch.serve import DEFAULT_TIER_POLICIES, Request, Server
 from repro.models import registry as R
+from repro.obs import watchdog
 
 
 def make_requests(cfg, n: int, max_new: int, seed: int = 0,
@@ -73,9 +75,19 @@ def _server(cfg, mesh, mode: str, slots: int, ctx: int, tiers) -> Server:
 
 
 def bench(arch: str = "xlstm-125m", requests: int = 8, max_new: int = 24,
-          slots: int = 4, ctx: int = 64, seed: int = 0) -> dict:
+          slots: int = 4, ctx: int = 64, seed: int = 0,
+          out_dir=None) -> dict:
     """Batched vs per_slot under identical mixed-tier load. One warmup pass
-    per mode pays compilation before the timed pass."""
+    per mode pays compilation before the timed pass.
+
+    A third pass re-runs the batched load with observability forced ON and
+    reports ``out["obs"]``: the traced-vs-untraced throughput overhead
+    fraction (gated <= 5% by check_regression.py) and the step/reset
+    retrace counts (serve.step must trace exactly twice: the prefill-chunk
+    shape and the decode shape). The untraced passes are untouched — their
+    numbers stay comparable to historical baselines. With ``out_dir`` set,
+    the traced pass also exports trace_serve.json + metrics_serve.json.
+    """
     cfg = R.get(arch).smoke
     mesh = meshlib.make_host_mesh()
     tiers = dict(DEFAULT_TIER_POLICIES)
@@ -97,6 +109,27 @@ def bench(arch: str = "xlstm-125m", requests: int = 8, max_new: int = 24,
         "p50_latency_s": out["batched"]["p50_latency_s"],
         "p99_latency_s": out["batched"]["p99_latency_s"],
     }
+    with obs.enabled_scope(True):
+        obs.trace.reset()
+        obs.metrics.reset()
+        sv = _server(cfg, mesh, "batched", slots, ctx, tiers)
+        run_load(sv, make_requests(cfg, min(3, requests), 2, seed=seed + 1))
+        sv.reset_metrics()
+        traced = run_load(sv, make_requests(cfg, requests, max_new, seed=seed))
+        if out_dir is not None:
+            out_dir = pathlib.Path(out_dir)
+            obs.export_trace(out_dir / "trace_serve.json")
+            obs.export_metrics(out_dir / "metrics_serve.json")
+    out["obs"] = {
+        "traced_tokens_per_sec": traced["tokens_per_sec"],
+        "overhead_fraction": max(
+            0.0, 1.0 - traced["tokens_per_sec"]
+            / max(out["batched"]["tokens_per_sec"], 1e-9)),
+        "retraces": {
+            "serve_step": watchdog.retrace_count(sv._jit_step),
+            "serve_reset": watchdog.retrace_count(sv._jit_reset),
+        },
+    }
     return out
 
 
@@ -108,17 +141,27 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--ctx", type=int, default=64)
     ap.add_argument("--out", default=None,
-                    help="directory to write BENCH_serve.json into")
+                    help="directory to write BENCH_serve.json (and the "
+                         "traced pass's trace/metrics artifacts) into")
+    ap.add_argument("--obs", dest="obs", action="store_true", default=None,
+                    help="enable tracing/metrics for the untraced passes too "
+                         "(default: env REPRO_OBS; the obs-overhead pass "
+                         "always runs traced)")
+    ap.add_argument("--no-obs", dest="obs", action="store_false")
     args = ap.parse_args()
+    if args.obs is not None:
+        obs.set_enabled(args.obs)
     res = bench(arch=args.arch, requests=args.requests, max_new=args.max_new,
-                slots=args.slots, ctx=args.ctx)
+                slots=args.slots, ctx=args.ctx, out_dir=args.out)
     s = res["serve"]
     print(f"[loadgen] batched {s['tokens_per_sec']:.1f} tok/s "
           f"({res['batched']['dispatches']} dispatches) vs per_slot "
           f"{res['per_slot']['tokens_per_sec']:.1f} tok/s "
           f"({res['per_slot']['dispatches']} dispatches) -> "
           f"{s['speedup_batched_vs_per_slot']:.2f}x; "
-          f"p50 {s['p50_latency_s'] * 1e3:.0f}ms p99 {s['p99_latency_s'] * 1e3:.0f}ms")
+          f"p50 {s['p50_latency_s'] * 1e3:.0f}ms p99 {s['p99_latency_s'] * 1e3:.0f}ms; "
+          f"obs overhead {res['obs']['overhead_fraction'] * 100:.1f}% "
+          f"(step traces: {res['obs']['retraces']['serve_step']})")
     if args.out:
         out_dir = pathlib.Path(args.out)
         out_dir.mkdir(parents=True, exist_ok=True)

@@ -46,9 +46,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import amlinear, engine
 from repro.launch import mesh as meshlib
 from repro.models import registry as R
+from repro.obs import watchdog
 from repro.parallel import sharding as shd
 
 # The shipped tier menu: accuracy-ranked alphabet positions (interleave.py)
@@ -206,7 +208,9 @@ class Server:
             (cache, nxt), _ = jax.lax.scan(body, init, jnp.arange(t_chunk))
             return nxt, cache
 
-        return jax.jit(step, donate_argnums=(1,))
+        # Exactly 2 traces per instance: T=prefill_chunk and T=1. More means
+        # shape churn; fewer after a numerics change means a stale cache.
+        return watchdog.watch_jit(step, name="serve.step", donate_argnums=(1,))
 
     # --- request lifecycle -------------------------------------------------
 
@@ -219,9 +223,13 @@ class Server:
             req.status, req.error, req.done = "rejected", err, True
             req.finished_at = req.submitted_at
             self.finished.append(req)
+            obs.instant("serve.reject", rid=req.rid, tier=req.tier)
+            obs.metrics.counter_inc("serve.rejected", tier=req.tier)
             return req
         req.status = "queued"
         self.queue.append(req)
+        obs.async_begin("serve.request", req.rid, tier=req.tier,
+                        prompt_len=len(req.prompt), max_new=req.max_new)
         return req
 
     def _admission_error(self, req: Request) -> str | None:
@@ -262,7 +270,8 @@ class Server:
 
             return jax.tree.map(leaf, batch_axes, cache, fresh)
 
-        return jax.jit(reset, donate_argnums=(0,))
+        return watchdog.watch_jit(reset, name="serve.reset",
+                                  donate_argnums=(0,))
 
     def _admit(self):
         fresh: list[int] = []
@@ -271,6 +280,7 @@ class Server:
                 req = self.queue.pop(0)
                 self.active[i] = req
                 req.status = "active"
+                obs.async_instant("serve.request", req.rid, "admit", slot=i)
                 self.pos[i] = 0
                 self._fed[i] = 0
                 self._tier_rows[i] = self._tier_id(req)
@@ -285,12 +295,15 @@ class Server:
     # --- dispatch ----------------------------------------------------------
 
     def _invoke(self, tokens: np.ndarray, lens: np.ndarray) -> np.ndarray:
-        with shd.set_mesh(self.mesh):
+        with obs.span("serve.dispatch", mode=self.mode,
+                      rows=int((lens > 0).sum()), chunk=int(tokens.shape[1])), \
+                shd.set_mesh(self.mesh):
             nxt, self.cache = self._jit_step(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(self.pos), jnp.asarray(lens),
                 jnp.asarray(self._tier_rows))
         self.stats["dispatches"] += 1
+        obs.metrics.counter_inc("serve.dispatches", mode=self.mode)
         return np.asarray(nxt)
 
     def _round(self, tokens: np.ndarray, lens: np.ndarray) -> np.ndarray:
@@ -332,6 +345,8 @@ class Server:
                 # The prediction from the last prompt position IS the first
                 # decode token: the final prompt token is cached exactly once
                 # (prefill's last step), never re-fed.
+                obs.async_instant("serve.request", req.rid, "prefill_done",
+                                  slot=i, prompt_len=len(req.prompt))
                 self._emit(i, int(nxt[i]))
 
     def _decode_tick(self):
@@ -352,12 +367,14 @@ class Server:
         req = self.active[i]
         req.out.append(tok)
         self.stats["generated"] += 1
+        obs.metrics.counter_inc("serve.tokens", tier=req.tier)
         if len(req.out) >= req.max_new:
             req.done = True
             req.status = "done"
             req.finished_at = time.perf_counter()
             self.finished.append(req)
             self.active[i] = None
+            obs.async_end("serve.request", req.rid, tokens=len(req.out))
 
     def reset_metrics(self) -> None:
         """Zero the counters and drop finished requests (benchmark warmup:
@@ -408,7 +425,17 @@ def main() -> None:
                          f"{tuple(DEFAULT_TIER_POLICIES)} — enables "
                          "per-request tier routing; requests cycle through "
                          "the listed tiers")
+    ap.add_argument("--obs", dest="obs", action="store_true", default=None,
+                    help="enable tracing/metrics (default: env REPRO_OBS)")
+    ap.add_argument("--no-obs", dest="obs", action="store_false")
+    ap.add_argument("--trace-out", default=None, metavar="DIR",
+                    help="write trace_serve.json + metrics_serve.json here "
+                         "(implies --obs)")
     args = ap.parse_args()
+    if args.trace_out is not None and args.obs is None:
+        args.obs = True
+    if args.obs is not None:
+        obs.set_enabled(args.obs)
 
     tiers = None
     tier_cycle = ("exact",)
@@ -446,6 +473,14 @@ def main() -> None:
         else:
             print(f"req {r.rid} [{r.tier}] prompt={r.prompt.tolist()} -> "
                   f"out={r.out}")
+    if args.trace_out is not None:
+        import pathlib
+
+        out_dir = pathlib.Path(args.trace_out)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        obs.export_trace(out_dir / "trace_serve.json")
+        obs.export_metrics(out_dir / "metrics_serve.json")
+        print(f"[serve] trace + metrics written to {out_dir}/")
 
 
 if __name__ == "__main__":

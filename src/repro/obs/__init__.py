@@ -1,0 +1,19 @@
+"""Unified observability: spans + metrics + jit-retrace watchdog.
+
+  from repro import obs
+  with obs.span("engine.am_matmul", backend=name):
+      ...
+  obs.metrics.counter_inc("serve.tokens", tier=tier)
+  step = obs.watchdog.watch_jit(step, name="serve.step")
+
+Everything except the watchdog is gated on `REPRO_OBS` (default off, see
+`repro.obs.config`) and costs one branch when disabled. Submodules stay
+import-light: `trace`/`metrics` are stdlib+numpy only, `watchdog` is the
+single jax importer.
+"""
+from repro.obs import config, metrics, trace  # noqa: F401
+from repro.obs.config import enabled, enabled_scope, set_enabled  # noqa: F401
+from repro.obs.trace import (  # noqa: F401
+    async_begin, async_end, async_instant, export_trace, instant, span,
+)
+from repro.obs.metrics import export_metrics  # noqa: F401

@@ -1,0 +1,49 @@
+"""Process-wide observability switch (env ``REPRO_OBS``, default OFF).
+
+One boolean gates every span and metric in the repo. OFF is the default so
+benchmark numbers stay bit-for-bit comparable with pre-observability runs:
+a disabled `trace.span` returns a shared no-op object and a disabled
+metrics call is a single branch — nothing is allocated, recorded, or
+exported. The jit-retrace watchdog is NOT gated here: its counting happens
+only at trace time (rare by construction), so it is always on.
+
+The switch is deliberately a plain module global, not thread-local:
+observability is a process property (the trace buffer and metrics registry
+are process-wide too), and the worker threads spawned by the async
+optimizer must inherit the caller's setting.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+
+def _env_default() -> bool:
+    return os.environ.get("REPRO_OBS", "").strip().lower() in (
+        "1", "true", "on", "yes"
+    )
+
+
+_enabled: bool = _env_default()
+
+
+def enabled() -> bool:
+    """Is observability (spans + metrics) currently on?"""
+    return _enabled
+
+
+def set_enabled(value: bool) -> None:
+    global _enabled
+    _enabled = bool(value)
+
+
+@contextlib.contextmanager
+def enabled_scope(value: bool = True):
+    """Temporarily force observability on/off (benchmarks' traced pass)."""
+    global _enabled
+    prev = _enabled
+    _enabled = bool(value)
+    try:
+        yield
+    finally:
+        _enabled = prev

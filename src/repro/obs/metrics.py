@@ -1,0 +1,180 @@
+"""Process-wide metrics registry: counters / gauges / histograms + stats
+dataclass plumbing.
+
+  from repro.obs import metrics
+  metrics.counter_inc("engine.dispatch", op="matmul", backend=name)
+  metrics.observe("engine.fold_seconds", dt, op="conv")
+  metrics.export_metrics("artifacts/metrics_serve.json")
+
+Series are keyed by ``name{label=value,...}`` with labels sorted, so the
+snapshot is a flat, diff-friendly dict `benchmarks/check_regression.py`
+can gate by dotted path. Label sets must be STABLE per metric name (same
+keys every call) — that keeps snapshots diffable across runs. All recording
+functions are single-branch no-ops while observability is disabled
+(`repro.obs.config`); the registry itself is thread safe.
+
+`stats_dataclass` is the shared derivation for the repo's telemetry
+dataclasses (nsga2.EvalStats / IslandStats): one declaration of the public
+dict shape yields `as_dict` (fields AND properties, in declared order) and
+`merge` (sums numeric dataclass fields, skipping identity fields) — the
+previously hand-rolled, drift-prone plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import threading
+
+import numpy as np
+
+from repro.obs import config
+
+
+def _series_key(name: str, labels: dict) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class MetricsRegistry:
+    """Thread-safe registry of labeled counters, gauges and histograms."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: dict[str, float] = {}
+        self._gauges: dict[str, float] = {}
+        self._hists: dict[str, list[float]] = {}
+
+    def counter_inc(self, name: str, value: float = 1, **labels) -> None:
+        key = _series_key(name, labels)
+        with self._lock:
+            self._counters[key] = self._counters.get(key, 0) + value
+
+    def gauge_set(self, name: str, value: float, **labels) -> None:
+        key = _series_key(name, labels)
+        with self._lock:
+            self._gauges[key] = value
+
+    def observe(self, name: str, value: float, **labels) -> None:
+        key = _series_key(name, labels)
+        with self._lock:
+            self._hists.setdefault(key, []).append(float(value))
+
+    def get_counter(self, name: str, **labels) -> float:
+        with self._lock:
+            return self._counters.get(_series_key(name, labels), 0)
+
+    def snapshot(self) -> dict:
+        """Flat, diff-friendly dict: stable keys, scalar (or small-dict)
+        values, histograms summarized to count/sum/min/max/p50/p99."""
+        with self._lock:
+            hists = {
+                k: {
+                    "count": len(v),
+                    "sum": float(np.sum(v)),
+                    "min": float(np.min(v)),
+                    "max": float(np.max(v)),
+                    "p50": float(np.percentile(v, 50)),
+                    "p99": float(np.percentile(v, 99)),
+                }
+                for k, v in self._hists.items() if v
+            }
+            return {
+                "counters": dict(sorted(self._counters.items())),
+                "gauges": dict(sorted(self._gauges.items())),
+                "histograms": dict(sorted(hists.items())),
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._hists.clear()
+
+
+REGISTRY = MetricsRegistry()
+
+
+def counter_inc(name: str, value: float = 1, **labels) -> None:
+    if config.enabled():
+        REGISTRY.counter_inc(name, value, **labels)
+
+
+def gauge_set(name: str, value: float, **labels) -> None:
+    if config.enabled():
+        REGISTRY.gauge_set(name, value, **labels)
+
+
+def observe(name: str, value: float, **labels) -> None:
+    if config.enabled():
+        REGISTRY.observe(name, value, **labels)
+
+
+def snapshot() -> dict:
+    return REGISTRY.snapshot()
+
+
+def reset() -> None:
+    REGISTRY.reset()
+
+
+def _json_default(o):
+    item = getattr(o, "item", None)  # numpy scalars
+    if callable(item):
+        return item()
+    return str(o)
+
+
+def export_metrics(path) -> pathlib.Path:
+    """Write the registry snapshot as JSON (diff/gate-friendly schema)."""
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(snapshot(), indent=1, default=_json_default))
+    return path
+
+
+# --- shared stats-dataclass derivation --------------------------------------
+
+
+def stats_dataclass(*, dict_keys: tuple[str, ...], merge_skip: tuple[str, ...] = ()):
+    """Class decorator deriving `as_dict` and `merge` for a telemetry
+    dataclass.
+
+    ``dict_keys`` is the public dict shape, IN ORDER — entries may be
+    dataclass fields or properties (derived rates sit mid-sequence in
+    existing consumers' JSON artifacts, so order is part of the contract).
+    ``merge(other)`` sums every numeric dataclass field not listed in
+    ``merge_skip`` (identity fields like an island index don't add).
+    Pre-existing `as_dict`/`merge` definitions on the class are replaced.
+    """
+
+    def wrap(cls):
+        if not dataclasses.is_dataclass(cls):
+            raise TypeError(f"{cls.__name__} must be a dataclass")
+        field_names = {f.name for f in dataclasses.fields(cls)}
+        for k in dict_keys:
+            if k not in field_names and not isinstance(
+                    getattr(cls, k, None), property):
+                raise TypeError(
+                    f"{cls.__name__}.{k} is neither a field nor a property")
+        addable = tuple(
+            f.name for f in dataclasses.fields(cls)
+            if f.name not in merge_skip and f.type in ("int", "float", int, float)
+        )
+
+        def as_dict(self) -> dict:
+            return {k: getattr(self, k) for k in dict_keys}
+
+        def merge(self, other) -> None:
+            for k in addable:
+                setattr(self, k, getattr(self, k) + getattr(other, k))
+
+        cls.as_dict = as_dict
+        cls.merge = merge
+        cls._stats_dict_keys = dict_keys
+        cls._stats_merge_fields = addable
+        return cls
+
+    return wrap

@@ -1,0 +1,142 @@
+"""Jit-retrace watchdog: count traces per jitted callable, assert budgets.
+
+  step = watchdog.watch_jit(step, name="serve.step", donate_argnums=(1,))
+  ...
+  watchdog.assert_retraces(step, 2)       # prefill shape + decode shape
+  watchdog.assert_max_retraces("serve.step", 2)
+
+`watch_jit(fun, ...)` wraps ``fun`` so its Python body bumps a counter,
+then `jax.jit`s the wrapper (jit kwargs pass through). JAX runs the Python
+body ONLY when the jit cache misses — i.e. once per distinct trace — so
+the counter is exactly the number of compilations, with zero steady-state
+overhead: cached calls never enter Python. Counting is therefore always
+on, independent of ``REPRO_OBS`` (a trace is rare by construction; when
+observability IS on, each trace also emits an instant event and a
+`obs.retraces` counter so recompiles are visible on the timeline).
+
+This targets the stale-jit-cache bug class (PR 4's latent retrace bugs):
+a jitted consumer that bakes a registry table in as a trace-time constant
+serves stale values after the registry changes — visible as a retrace
+count that FAILS to grow when it should (`assert_retraces` exact check) —
+while an unstable trace-time constant recompiles every call — visible as
+a count that blows past `assert_max_retraces`.
+
+Records are registered per `watch_jit` call; name lookups aggregate over
+every record sharing the name (e.g. one record per lru-cached shape
+specialization of the batched evaluator), and the precise per-instance
+record rides on the returned callable as ``fn._obs_watch``.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+
+import jax
+
+from repro.obs import config, metrics, trace
+
+_lock = threading.Lock()
+_records: list["WatchRecord"] = []
+
+
+class WatchRecord:
+    """Trace counter for one watched jitted callable."""
+
+    __slots__ = ("name", "traces")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.traces = 0
+
+    def __repr__(self):
+        return f"WatchRecord({self.name!r}, traces={self.traces})"
+
+
+def watch_jit(fun, *, name: str | None = None, **jit_kwargs):
+    """`jax.jit(fun, **jit_kwargs)` with per-trace counting attached.
+
+    Returns the jitted callable; its `._obs_watch` is the WatchRecord.
+    """
+    rec = WatchRecord(name or getattr(fun, "__qualname__", repr(fun)))
+    with _lock:
+        _records.append(rec)
+
+    @functools.wraps(fun)
+    def counted(*args, **kwargs):
+        rec.traces += 1
+        if config.enabled():
+            trace.instant("jit.trace", target=rec.name, count=rec.traces)
+            metrics.counter_inc("obs.retraces", target=rec.name)
+        return fun(*args, **kwargs)
+
+    jitted = jax.jit(counted, **jit_kwargs)
+    jitted._obs_watch = rec
+    return jitted
+
+
+def _resolve(target) -> list[WatchRecord]:
+    rec = getattr(target, "_obs_watch", None)
+    if rec is not None:
+        return [rec]
+    if isinstance(target, WatchRecord):
+        return [target]
+    if isinstance(target, str):
+        with _lock:
+            found = [r for r in _records if r.name == target]
+        if not found:
+            raise KeyError(f"no watched callable named {target!r}")
+        return found
+    raise TypeError(f"expected a watched callable, WatchRecord or name; "
+                    f"got {type(target).__name__}")
+
+
+def retrace_count(target) -> int:
+    """Total traces for a watched callable, record, or name (names sum
+    over every record registered under them)."""
+    return sum(r.traces for r in _resolve(target))
+
+
+def counts() -> dict[str, int]:
+    """Name -> total trace count over all registered records."""
+    out: dict[str, int] = {}
+    with _lock:
+        for r in _records:
+            out[r.name] = out.get(r.name, 0) + r.traces
+    return out
+
+
+def reset() -> None:
+    """Drop all records (tests); live callables keep counting into their
+    own (now unregistered) records."""
+    with _lock:
+        _records.clear()
+
+
+def assert_max_retraces(target, max_traces: int) -> None:
+    """Fail if the target compiled more than ``max_traces`` times (the
+    unstable-trace-time-constant failure mode: recompiling per call)."""
+    n = retrace_count(target)
+    if n > max_traces:
+        names = sorted({r.name for r in _resolve(target)})
+        raise AssertionError(
+            f"{'/'.join(names)} traced {n} times (budget {max_traces}): a "
+            "jitted callable is being re-traced — check for unstable "
+            "trace-time constants or shape churn in its operands")
+
+
+def assert_retraces(target, expected: int) -> None:
+    """Fail unless the target compiled EXACTLY ``expected`` times. Catches
+    both over-tracing and the stale-cache mode, where a registry change
+    should have forced a retrace (new operand shape) but did not because
+    the table was baked in as a trace-time constant."""
+    n = retrace_count(target)
+    if n != expected:
+        names = sorted({r.name for r in _resolve(target)})
+        hint = (
+            "re-traced more than expected — unstable trace-time constants?"
+            if n > expected else
+            "traced fewer times than expected — a consumer may be serving "
+            "a stale jit cache entry (table baked in as a trace-time "
+            "constant instead of passed as an operand)")
+        raise AssertionError(
+            f"{'/'.join(names)} traced {n} times, expected {expected}: {hint}")

@@ -83,6 +83,32 @@ def test_baseline_ceiling_checked_on_committed_value(tmp_path):
     assert cr.check(f, b, rules=(rule,)) == []
 
 
+def test_abs_tol_bands_near_zero_baselines(tmp_path):
+    """A committed overhead of 0.00 makes any multiplicative band collapse
+    to zero — abs_tol is the additive slack that keeps the gate usable."""
+    rule = cr.Rule("m.json", "a.overhead", "lower", tol=0.0, abs_tol=0.05,
+                   baseline_ceiling=0.05)
+    f, b = tmp_path / "f", tmp_path / "b"
+    f.mkdir(), b.mkdir()
+    _write(b, "m.json", {"a": {"overhead": 0.0}})
+    _write(f, "m.json", {"a": {"overhead": 0.04}})  # within 0 + abs_tol
+    assert cr.check(f, b, rules=(rule,)) == []
+    _write(f, "m.json", {"a": {"overhead": 0.06}})  # past the slack
+    assert len(cr.check(f, b, rules=(rule,))) == 1
+    # ... and the ceiling still rejects a bad committed baseline.
+    _write(b, "m.json", {"a": {"overhead": 0.2}})
+    fails = cr.check(f, b, rules=(rule,))
+    assert len(fails) == 1 and "acceptance bound" in fails[0]
+
+
+def test_retrace_rule_zero_slack():
+    """The serve-step retrace gate: baseline 2 traces, zero tolerance — a
+    third compile fails, two passes."""
+    rule = next(r for r in cr.RULES if r.path == "obs.retraces.serve_step")
+    assert rule.direction == "lower" and rule.tol == 0.0
+    assert rule.abs_tol == 0.0 and rule.baseline_ceiling == 2.0
+
+
 def test_update_adopts_fresh_and_grafts_cross_file(tmp_path):
     rules = (
         cr.Rule("m.json", "a.ratio", "lower"),
