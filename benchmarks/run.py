@@ -16,7 +16,11 @@ seed-vs-expanded alphabet evaluator rows), BENCH_codesign.json
 (two-level placement+interleaving search: specs characterized/sec,
 inner-evals/sec, memo hit rates at every level) and BENCH_serve.json
 (continuous-batching serving tier: batched vs per-slot tokens/sec,
-p50/p99 request latency, dispatch counts under mixed-tier load).
+p50/p99 request latency, dispatch counts under mixed-tier load, plus the
+audit pass: shadow-exact audit overhead, per-tier token agreement, and
+calibration z). audit_drift.json re-characterizes the AM error models on
+an independent draw against the committed artifacts/audit_baseline.json
+(a fresh baseline lands next to it for --update adoption).
 
 --smoke runs the runner-sized subset the PR gate measures (engine,
 foundry, codesign, the 1/2-device sharded-search sweep — written to
@@ -75,12 +79,41 @@ def smoke(out_dir: pathlib.Path) -> None:
         "Serving — batched vs per-slot mixed-tier load (smoke)",
         lambda: _serve_bench(requests=8, max_new=24, slots=4,
                              out_dir=out_dir)))
+    _write(out_dir, "audit_drift.json", _section(
+        "AM error-model drift — re-characterization vs committed baseline",
+        lambda: _drift_check(out_dir, check_n=1 << 13)))
 
 
 def _serve_bench(**kw):
     from repro.launch import loadgen
 
     return loadgen.bench(**kw)
+
+
+def _drift_check(out_dir: pathlib.Path, build_n=None, check_n=None):
+    """Re-characterize the variant registry against the committed
+    artifacts/audit_baseline.json (independent operand draw — see
+    repro/obs/drift.py) and drop a fresh baseline next to the report so
+    `check_regression --update` can adopt it. With no committed baseline
+    yet, the report carries alert_count=0 and flags the bootstrap."""
+    from repro.obs import drift
+
+    fresh = drift.build_baseline(n=build_n)
+    drift.save_baseline(fresh, out_dir / "audit_baseline.json")
+    base_path = (pathlib.Path(__file__).resolve().parent.parent
+                 / "artifacts" / "audit_baseline.json")
+    if not base_path.exists():
+        print("no committed audit_baseline.json — bootstrap: adopt the "
+              "bench_fresh copy via check_regression --update")
+        return {"alert_count": 0, "bootstrap": True,
+                "variants_checked": len(fresh["variants"])}
+    report = drift.check_baseline(drift.load_baseline(base_path), n=check_n)
+    print(f"{report['variants_checked']} variants, "
+          f"max |mu z| {report['max_abs_mu_z']:.2f}, "
+          f"{report['alert_count']} alert(s)")
+    for a in report["alerts"]:
+        print(f"  ALERT {a}")
+    return report
 
 
 def _codesign_bench_traced(out_dir: pathlib.Path):
@@ -133,6 +166,9 @@ def full(out_dir: pathlib.Path) -> None:
         "Serving — batched vs per-slot mixed-tier load",
         lambda: _serve_bench(requests=12, max_new=24, slots=4,
                              out_dir=out_dir)))
+    _write(out_dir, "audit_drift.json", _section(
+        "AM error-model drift — re-characterization vs committed baseline",
+        lambda: _drift_check(out_dir)))
     _section("Roofline — dry-run derived, per (arch x shape x mesh)",
              roofline_summary.main)
 

@@ -71,6 +71,8 @@ import numpy as np
 
 from repro.core import interleave, schemes, surrogate
 from repro.obs import metrics as obs_metrics
+from repro.obs import numerics as obs_numerics
+from repro.obs import trace as obs_trace
 from repro.obs.config import enabled as _obs_enabled
 
 BACKEND_NAMES = (
@@ -816,7 +818,8 @@ class AMEngine:
         return int(dict(self.mesh.shape)[self.pop_axis_name])
 
     def matmul(self, x, w, slot_map=None, *, backend=None, key=None,
-               block=None, return_moments=False, x_population=None):
+               block=None, return_moments=False, x_population=None,
+               site=None):
         """x (..., K) @ w (K, N) under AM numerics.
 
         Leading non-contracting dims of x are flattened into M for the
@@ -826,6 +829,9 @@ class AMEngine:
 
         A `tiers:<name>` slot_map takes the per-row tier-routed path
         instead (see register_tier_set / row_tier_context).
+
+        ``site`` labels this call site in the numerics-audit accumulators
+        (default "matmul"); it does not affect the computation.
         """
         if isinstance(slot_map, str) and slot_map.startswith("tiers:"):
             return self._row_tier_matmul(
@@ -850,6 +856,10 @@ class AMEngine:
             out = self._sharded_matmul(name, ctx, x2, w, cmap, key)
         else:
             out = get_backend(name).matmul(ctx, x2, w, cmap, key)
+        if self._audit_wanted(name, cmap, key, out, return_moments,
+                              site or "matmul"):
+            self._audit_matmul(site or "matmul", name, slot_map, x2, w,
+                               cmap, key, out)
 
         def fix(t):
             if cmap.pop:
@@ -909,11 +919,12 @@ class AMEngine:
         return out.reshape(lead + (n,))
 
     def conv2d(self, x, w, slot_map=None, *, backend=None, key=None,
-               return_moments=False, x_population=None):
+               return_moments=False, x_population=None, site=None):
         """NHWC VALID stride-1 conv2d under AM numerics.
 
         x: (B, H, W, Cin) — or (P, B, H, W, Cin) with a population slot_map;
         w: (F, kh, kw, Cin); slot_map canonicalizes to (P?, F, kh, kw).
+        ``site`` labels this call in the numerics-audit accumulators.
         """
         if isinstance(slot_map, str) and slot_map.startswith("tiers:"):
             raise NotImplementedError(
@@ -933,7 +944,12 @@ class AMEngine:
         ctx = _Ctx(self, None, return_moments, base_ndim=4, pop_x=pop_x)
         if self._pop_shards(name, cmap):
             return self._sharded_conv2d(name, ctx, x, w, cmap, key)
-        return get_backend(name).conv2d(ctx, x, w, cmap, key)
+        out = get_backend(name).conv2d(ctx, x, w, cmap, key)
+        if self._audit_wanted(name, cmap, key, out, return_moments,
+                              site or "conv2d"):
+            self._audit_conv2d(site or "conv2d", name, slot_map, x, w,
+                               cmap, key, out)
+        return out
 
     # --- population sharding (surrogate backends only) ---------------------
     #
@@ -1127,6 +1143,102 @@ class AMEngine:
             return out[0][:p], out[1][:p]
         return out[:p]
 
+    # --- online numerics auditing (obs/numerics.py) ------------------------
+    #
+    # A deterministically sampled subset of eager approximate calls is
+    # re-run on the exact backend (a capped tile for large shapes) and the
+    # realized signed relative error streamed into obs_numerics.AUDIT,
+    # together with a calibration z-score of the realized errors against
+    # the surrogate-predicted (mu, sigma). The sampling decision is a pure
+    # hash of the call's global CRN key + site — the same invariant that
+    # makes CRN noise schedule/shard-invariant makes the audited-call set
+    # reproducible. The audited output is NEVER modified: audit-on runs are
+    # bitwise identical to audit-off runs.
+    #
+    # Traced calls (any tracer among out/key) are skipped — re-running
+    # inside a jit would bloat every compiled graph; eager call sites
+    # (foundry sweeps, benchmarks, tests, model evaluation outside jit)
+    # carry the signal. Population maps are skipped too (the per-genome
+    # search path has its own bit-exactness gates); serving tiers get the
+    # shadow-exact request audits in launch/serve.py instead.
+
+    def _audit_wanted(self, name, cmap: CanonicalMap, key, out,
+                      return_moments: bool, site: str) -> bool:
+        if not obs_numerics.audit_active():  # one branch when audits are off
+            return False
+        if (return_moments or cmap.pop or key is None
+                or not bool(np.any(cmap.vids))
+                or get_backend(name).fidelity == "exact"
+                or isinstance(out, jax.core.Tracer)
+                or isinstance(key, jax.core.Tracer)):
+            return False
+        return obs_numerics.sample_decision(key, site)
+
+    def _variant_label(self, slot_map) -> str:
+        return slot_map if isinstance(slot_map, str) else "custom"
+
+    def _record_audit(self, site, name, slot_map, y, y_ref, mean_pred,
+                      var_pred, t0) -> None:
+        rel = obs_numerics.relative_error(y, y_ref)
+        mask = var_pred > 0
+        z = None
+        if mask.any():
+            # Residuals standardized by the surrogate-predicted moments are
+            # ~iid N(0,1) when the error model is calibrated (exactly the
+            # CRN field for moments-fidelity backends, CLT for bit-exact
+            # ones), so sqrt(n) * mean(resid) ~ N(0,1) either way.
+            r = (y - mean_pred)[mask] / np.sqrt(var_pred[mask])
+            z = float(r.mean() * np.sqrt(r.size))
+        obs_numerics.record(site, name, self._variant_label(slot_map), rel, z)
+        obs_metrics.observe("numerics.audit.seconds",
+                            time.perf_counter() - t0, op=site)
+
+    def _audit_matmul(self, site, name, slot_map, x2, w, cmap, key, out):
+        with obs_trace.span("engine.audit", op=site, backend=name):
+            t0 = time.perf_counter()
+            rows = obs_numerics.audit_max_rows()
+            xs = np.asarray(x2, np.float64)[:rows]
+            y = np.asarray(out, np.float64)[:rows]
+            ectx = _Ctx(self, None, False, base_ndim=2, pop_x=False)
+            y_ref = np.asarray(
+                _exact_matmul(ectx, jnp.asarray(xs, jnp.float32), w, cmap,
+                              None),
+                np.float64)
+            wf = np.asarray(w, np.float64)
+            mu, sg = moment_maps(cmap.vids, self.noise_scale)  # (K, N) f32
+            mean_pred = xs @ (wf * (1.0 + mu.astype(np.float64)))
+            var_pred = (xs * xs) @ ((wf * wf) * np.square(sg, dtype=np.float64))
+            self._record_audit(site, name, slot_map, y, y_ref, mean_pred,
+                               var_pred, t0)
+
+    def _audit_conv2d(self, site, name, slot_map, x, w, cmap, key, out):
+        with obs_trace.span("engine.audit", op=site, backend=name):
+            t0 = time.perf_counter()
+            nb = obs_numerics.audit_max_images()
+            xs = np.asarray(x, np.float64)[:nb]
+            y = np.asarray(out, np.float64)[:nb]
+            f, kh, kw, cin = np.shape(w)
+            ectx = _Ctx(self, None, False, base_ndim=4, pop_x=False)
+            y_ref = np.asarray(
+                _exact_conv2d(ectx, jnp.asarray(xs, jnp.float32), w, cmap,
+                              None),
+                np.float64)
+            # Predicted moments via the same host fold as the fused backend,
+            # promoted to f64: mean = (w(1+mu)) @ patches, var = (w² σ²) @ p².
+            wm, wv = fold_conv_gemm_weights(
+                w, cmap, noise_scale=self.noise_scale, layout="tap_major")
+            pat = conv_patch_matrix(xs, kh, kw)  # (kh*kw*C, nb, ho*wo) f64
+            pk = pat.reshape(pat.shape[0], -1)
+
+            def unflatten(t):  # (F, nb*ho*wo) -> (nb, ho, wo, F)
+                t = t.reshape(f, nb, y.shape[-3], y.shape[-2])
+                return np.moveaxis(t, 0, -1)
+
+            mean_pred = unflatten(wm.astype(np.float64) @ pk)
+            var_pred = unflatten(wv.astype(np.float64) @ (pk * pk))
+            self._record_audit(site, name, slot_map, y, y_ref, mean_pred,
+                               var_pred, t0)
+
     @staticmethod
     def _resolve_pop_x(x, cmap: CanonicalMap, base_ndim: int, x_population):
         if x_population is None:
@@ -1150,23 +1262,25 @@ DEFAULT_ENGINE = AMEngine()
 def am_matmul(x, w, slot_map=None, *, backend=None, key=None, engine=None,
               block=None, return_moments=False, x_population=None,
               tile_k=None, tile_n=None, noise_scale=None, mesh=None,
-              pop_axis_name=None):
+              pop_axis_name=None, site=None):
     """Backend-dispatched AM matmul (module-level convenience)."""
     eng = _configured(engine, tile_k=tile_k, tile_n=tile_n,
                       noise_scale=noise_scale, mesh=mesh,
                       pop_axis_name=pop_axis_name)
     return eng.matmul(x, w, slot_map, backend=backend, key=key, block=block,
-                      return_moments=return_moments, x_population=x_population)
+                      return_moments=return_moments, x_population=x_population,
+                      site=site)
 
 
 def am_conv2d(x, w, slot_map=None, *, backend=None, key=None, engine=None,
               return_moments=False, x_population=None, noise_scale=None,
-              mesh=None, pop_axis_name=None):
+              mesh=None, pop_axis_name=None, site=None):
     """Backend-dispatched AM conv2d (module-level convenience)."""
     eng = _configured(engine, noise_scale=noise_scale, mesh=mesh,
                       pop_axis_name=pop_axis_name)
     return eng.conv2d(x, w, slot_map, backend=backend, key=key,
-                      return_moments=return_moments, x_population=x_population)
+                      return_moments=return_moments, x_population=x_population,
+                      site=site)
 
 
 def _configured(engine, **overrides) -> AMEngine:

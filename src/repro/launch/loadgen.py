@@ -10,6 +10,13 @@ reports the speedup; benchmarks/run.py writes it to BENCH_serve.json where
 check_regression.py gates `serve.tokens_per_sec` and the batched-over-
 per_slot speedup floor.
 
+A fourth pass (``out["audit"]``) re-runs the traced load with shadow-exact
+audits sampling every request, measuring the audits' hot-path overhead
+(gated <= 5%: the deferred-audit design means only the sampling hash rides
+the serving loop), per-tier exact-vs-served token agreement, and — via a
+handful of eager engine probes — the realized calibration z of the
+surrogate error model, drift-checked against artifacts/audit_baseline.json.
+
   PYTHONPATH=src python -m repro.launch.loadgen --out artifacts
 """
 from __future__ import annotations
@@ -25,7 +32,11 @@ from repro import obs
 from repro.launch import mesh as meshlib
 from repro.launch.serve import DEFAULT_TIER_POLICIES, Request, Server
 from repro.models import registry as R
+from repro.obs import numerics as obs_numerics
 from repro.obs import watchdog
+
+_BASELINE_PATH = (pathlib.Path(__file__).resolve().parents[3]
+                  / "artifacts" / "audit_baseline.json")
 
 
 def make_requests(cfg, n: int, max_new: int, seed: int = 0,
@@ -66,12 +77,55 @@ def run_load(server: Server, requests: list[Request]) -> dict:
     }
 
 
-def _server(cfg, mesh, mode: str, slots: int, ctx: int, tiers) -> Server:
+def _server(cfg, mesh, mode: str, slots: int, ctx: int, tiers,
+            audit_fraction: float = 0.0) -> Server:
     # per_slot is the pre-batching baseline: one dispatch per busy slot,
     # token-at-a-time prefill (prefill_chunk=1).
     chunk = 4 if mode == "batched" else 1
     return Server(cfg, mesh, slots=slots, ctx=ctx, tiers=tiers, mode=mode,
-                  prefill_chunk=chunk)
+                  prefill_chunk=chunk, audit_fraction=audit_fraction)
+
+
+def _calibration_probes(n_keys: int = 4, seed: int = 7) -> dict:
+    """Eager AM matmuls with fixed CRN keys through the engine audit hook.
+
+    Serving steps are jitted, so the engine's eager-only audit sampler never
+    fires inside the load itself; these probes are the realized-error source
+    feeding the numerics accumulators (and the drift check). Keys are fixed
+    fold_ins of a constant, so the surrogate draws — and hence the measured
+    calibration z — are deterministic run to run.
+    """
+    import jax
+
+    from repro.core import engine
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((24, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 32)).astype(np.float32)
+    eng = engine.AMEngine()
+    base = jax.random.PRNGKey(seed)
+    prev = obs_numerics.audit_fraction()
+    obs_numerics.configure(fraction=1.0)
+    try:
+        for i in range(n_keys):
+            key = jax.random.fold_in(base, i)
+            for backend in ("surrogate_fused", "surrogate_xla"):
+                eng.matmul(x, w, "uniform:pm_csi", backend=backend, key=key,
+                           site="loadgen.probe")
+            if i == 0:
+                # Bit-exact output is key-independent; one emulated probe
+                # checks the characterized moments against realized bits.
+                eng.matmul(x[:8], w, "rr:8", backend="bitexact_ref", key=key,
+                           site="loadgen.probe")
+    finally:
+        obs_numerics.configure(fraction=prev)
+    z_abs = 0.0
+    sampled = 0
+    for _, acc in obs_numerics.AUDIT.items():
+        z_abs = max(z_abs, acc.z_max_abs)
+        sampled += 1
+    return {"probe_keys": n_keys, "probe_sites": sampled,
+            "calibration_z_abs": z_abs}
 
 
 def bench(arch: str = "xlstm-125m", requests: int = 8, max_new: int = 24,
@@ -87,6 +141,11 @@ def bench(arch: str = "xlstm-125m", requests: int = 8, max_new: int = 24,
     shape and the decode shape). The untraced passes are untouched — their
     numbers stay comparable to historical baselines. With ``out_dir`` set,
     the traced pass also exports trace_serve.json + metrics_serve.json.
+
+    A fourth pass (``out["audit"]``, see ``_audit_pass``) re-runs the
+    traced load with shadow-exact audits on every request and reports the
+    audit hot-path overhead, per-tier token agreement, calibration z, and
+    the drift check against artifacts/audit_baseline.json.
     """
     cfg = R.get(arch).smoke
     mesh = meshlib.make_host_mesh()
@@ -130,7 +189,74 @@ def bench(arch: str = "xlstm-125m", requests: int = 8, max_new: int = 24,
             "serve_reset": watchdog.retrace_count(sv._jit_reset),
         },
     }
+    out["audit"] = _audit_pass(cfg, mesh, tiers, requests, max_new, slots,
+                               ctx, seed, traced["tokens_per_sec"], out_dir)
     return out
+
+
+def _audit_pass(cfg, mesh, tiers, requests, max_new, slots, ctx, seed,
+                traced_tps, out_dir) -> dict:
+    """Audit-enabled re-run of the traced load (audit_fraction=1.0).
+
+    The hot-path timing covers run_load() only — shadow rescoring is
+    deferred, so ``overhead_fraction`` (vs the plain traced pass) isolates
+    exactly what auditing adds to the serving loop: the per-finish sampling
+    hash and the pending-list append. run_audits() is timed separately as
+    ``shadow_seconds``. Calibration probes and the observed-vs-baseline
+    drift check ride the same pass so one BENCH_serve.json carries every
+    audit gate check_regression.py reads.
+    """
+    with obs.enabled_scope(True):
+        obs.trace.reset()
+        obs.metrics.reset()
+        obs_numerics.reset()
+        sv = _server(cfg, mesh, "batched", slots, ctx, tiers,
+                     audit_fraction=1.0)
+        run_load(sv, make_requests(cfg, min(3, requests), 2, seed=seed + 1))
+        sv.reset_metrics()  # drop the short warmup requests' pending audits
+        # Pay the audit-step compiles outside the timings: one request whose
+        # replay pads to the same pow2 length as the timed load's replays.
+        run_load(sv, make_requests(cfg, 1, max_new - 2, seed=seed + 2))
+        sv.run_audits()
+        sv.reset_metrics()
+        audited = run_load(sv, make_requests(cfg, requests, max_new,
+                                             seed=seed))
+        t0 = time.perf_counter()
+        sv.run_audits()
+        shadow_s = time.perf_counter() - t0
+        summary = sv.audit_summary()
+        probes = _calibration_probes()
+        obs_numerics.publish()
+        drift_report = None
+        if _BASELINE_PATH.exists():
+            from repro.obs import drift
+
+            drift_report = drift.check_observed(
+                obs_numerics.snapshot(), drift.load_baseline(_BASELINE_PATH))
+        if out_dir is not None:
+            doc = {"summary": summary, "probes": probes,
+                   "numerics": obs_numerics.snapshot(),
+                   "drift": drift_report}
+            p = pathlib.Path(out_dir) / "audit_serve.json"
+            p.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    tiers_out = summary["tiers"]
+    return {
+        "audited_requests": summary["audited_requests"],
+        "audited_tokens_per_sec": audited["tokens_per_sec"],
+        "overhead_fraction": max(
+            0.0, 1.0 - audited["tokens_per_sec"] / max(traced_tps, 1e-9)),
+        "shadow_seconds": shadow_s,
+        "token_agreement": {t: v["token_agreement"]
+                            for t, v in tiers_out.items()},
+        "max_logit_divergence": {t: v["max_logit_divergence"]
+                                 for t, v in tiers_out.items()},
+        "replay_mismatches": sum(v["replay_mismatches"]
+                                 for v in tiers_out.values()),
+        "calibration_z_abs": probes["calibration_z_abs"],
+        "drift_alerts": (drift_report["alert_count"]
+                         if drift_report is not None else 0),
+        "drift_baseline_found": drift_report is not None,
+    }
 
 
 def main() -> None:
@@ -162,6 +288,13 @@ def main() -> None:
           f"p50 {s['p50_latency_s'] * 1e3:.0f}ms p99 {s['p99_latency_s'] * 1e3:.0f}ms; "
           f"obs overhead {res['obs']['overhead_fraction'] * 100:.1f}% "
           f"(step traces: {res['obs']['retraces']['serve_step']})")
+    a = res["audit"]
+    agree = " ".join(f"{t}={v:.3f}" for t, v in a["token_agreement"].items())
+    print(f"[loadgen] audit: {a['audited_requests']} requests, "
+          f"hot-path overhead {a['overhead_fraction'] * 100:.1f}%, "
+          f"shadow {a['shadow_seconds']:.1f}s; agreement {agree}; "
+          f"|z| {a['calibration_z_abs']:.2f}; "
+          f"drift alerts {a['drift_alerts']}")
     if args.out:
         out_dir = pathlib.Path(args.out)
         out_dir.mkdir(parents=True, exist_ok=True)

@@ -104,7 +104,8 @@ class Server:
                  am_backend: str | None = None,
                  am_policy: str = "uniform:pm_csi",
                  tiers: dict[str, str | None] | None = None,
-                 mode: str = "batched", prefill_chunk: int = 8):
+                 mode: str = "batched", prefill_chunk: int = 8,
+                 audit_fraction: float = 0.0):
         if mode not in ("batched", "per_slot"):
             raise ValueError(f"mode must be 'batched' or 'per_slot', got {mode!r}")
         if tiers is not None and am_backend and am_backend.startswith("bitexact"):
@@ -128,6 +129,15 @@ class Server:
             self._tier_names = None
             self._tier_index = {}
         self.cfg = cfg
+        # Shadow-exact audits replay sampled finished requests under this
+        # exact-numerics twin of the serving config (same arch/params).
+        self._cfg_exact = cfg.with_numerics(amlinear.EXACT)
+        self.audit_fraction = min(1.0, max(0.0, float(audit_fraction)))
+        self._audit_salt = seed
+        self._audit_pending: list[Request] = []
+        self.audit_results: list[dict] = []
+        self._jit_audit_tier = None
+        self._jit_audit_exact = None
         self.mesh = mesh
         self.slots = slots
         self.ctx = ctx
@@ -374,14 +384,178 @@ class Server:
             req.finished_at = time.perf_counter()
             self.finished.append(req)
             self.active[i] = None
-            obs.async_end("serve.request", req.rid, tokens=len(req.out))
+            if self._audit_sampled(req):
+                # Defer the trace-lifecycle end: run_audits() appends the
+                # audit span/instant to this request's async track and
+                # closes it. The hot path only queues the reference.
+                self._audit_pending.append(req)
+                obs.async_instant("serve.request", req.rid, "audit_pending")
+            else:
+                obs.async_end("serve.request", req.rid, tokens=len(req.out))
 
     def reset_metrics(self) -> None:
         """Zero the counters and drop finished requests (benchmark warmup:
         the jitted step is cached per Server instance, so a measured pass
         must reuse the instance a warmup pass compiled)."""
         self.finished.clear()
+        self._audit_pending.clear()
+        self.audit_results.clear()
         self.stats = {k: 0 for k in self.stats}
+
+    # --- shadow-exact audits (off the hot path) ----------------------------
+    #
+    # A deterministic fraction of finished requests — sampled by a pure
+    # hash of (server seed, request id), never the slot, schedule, or
+    # admission time — is replayed teacher-forced through two jitted scans:
+    # once under the serving numerics (which, by the slot-isolation + CRN
+    # position-keying contract, bitwise reproduces the served logits) and
+    # once under the exact-numerics twin config. Per-tier token agreement
+    # (did exact greedy decoding pick the served token?) and max logit
+    # divergence go out as metrics; an `audit` phase lands on the request's
+    # async trace track. run() NEVER calls this — callers invoke
+    # run_audits() after the serving burst, so audits cost the hot path
+    # nothing beyond the sampling hash (gated ≤5% in CI by loadgen).
+
+    def _audit_sampled(self, req: Request) -> bool:
+        if self.audit_fraction <= 0.0 or not obs.enabled():
+            return False
+        from repro.obs import numerics as obs_numerics
+
+        u = obs_numerics.request_sample_u(self._audit_salt, str(req.rid))
+        return u < self.audit_fraction
+
+    def _build_audit_step(self, exact: bool):
+        """Teacher-forced replay step: feed tokens[r, t] at position t for
+        t < lens[r], returning the stacked per-step logits (T, B, V).
+
+        Same masked-merge scan as the serving step (padded steps cannot
+        corrupt the cache) at the serving batch width, so the tier replay
+        runs the bitwise-identical row arithmetic the live dispatch ran.
+        """
+        cfg = self._cfg_exact if exact else self.cfg
+        dec = R.decode_fn(cfg)
+        tiered = (not exact) and self._tier_names is not None
+        needs_key = (not exact) and self._needs_key
+        noise_key = self._noise_key
+        batch_axes = self._batch_axes
+
+        def audit_step(params, cache, tokens, lens, tiers):
+            def body(cache, t):
+                live = t < lens
+                pos = jnp.zeros_like(lens) + t
+                key = noise_key if needs_key else None
+                if tiered:
+                    with engine.row_tier_context(tiers, pos):
+                        logits, new_cache = dec(
+                            params, cache, tokens[:, t], pos, cfg, key=key)
+                else:
+                    logits, new_cache = dec(
+                        params, cache, tokens[:, t], pos, cfg, key=key)
+
+                def merge(ax, new, old):
+                    if ax < 0:
+                        return new
+                    m = live.reshape(
+                        (1,) * ax + (-1,) + (1,) * (new.ndim - ax - 1))
+                    return jnp.where(m, new, old)
+
+                merged = jax.tree.map(merge, batch_axes, new_cache, cache)
+                return merged, logits
+
+            _, seq = jax.lax.scan(body, cache, jnp.arange(tokens.shape[1]))
+            return seq  # (T, B, vocab)
+
+        name = "serve.audit_exact" if exact else "serve.audit_tier"
+        return watchdog.watch_jit(audit_step, name=name)
+
+    def _shadow_rescore(self, req: Request) -> dict:
+        served = np.asarray(req.out, np.int64)
+        fed = np.concatenate([np.asarray(req.prompt, np.int32),
+                              served[:-1].astype(np.int32)])
+        t_in = len(fed)
+        tpad = 1 << max(0, (t_in - 1).bit_length())  # pow2: bounded retraces
+        tokens = np.zeros((self.slots, tpad), np.int32)
+        tokens[0, :t_in] = fed
+        lens = np.zeros(self.slots, np.int32)
+        lens[0] = t_in
+        tiers = np.zeros(self.slots, np.int32)
+        tiers[0] = self._tier_id(req)
+        if self._jit_audit_tier is None:
+            self._jit_audit_tier = self._build_audit_step(exact=False)
+            self._jit_audit_exact = self._build_audit_step(exact=True)
+        with shd.set_mesh(self.mesh):
+            # self._fresh is never donated or mutated here: both replays
+            # start from the pristine cache a fresh admission would get.
+            lg_t = np.asarray(self._jit_audit_tier(
+                self.params, self._fresh, jnp.asarray(tokens),
+                jnp.asarray(lens), jnp.asarray(tiers)), np.float64)
+            lg_e = np.asarray(self._jit_audit_exact(
+                self.params, self._fresh, jnp.asarray(tokens),
+                jnp.asarray(lens), jnp.asarray(tiers)), np.float64)
+        # Predictive positions: the logits that produced each served token
+        # (last prompt position through the second-to-last output).
+        sl = slice(len(req.prompt) - 1, t_in)
+        replay_pred = np.argmax(lg_t[sl, 0, :], axis=-1)
+        exact_pred = np.argmax(lg_e[sl, 0, :], axis=-1)
+        return {
+            "rid": req.rid,
+            "tier": req.tier,
+            "tokens": int(served.size),
+            "token_agreement": float(np.mean(exact_pred == served)),
+            "max_logit_divergence": float(
+                np.max(np.abs(lg_t[sl, 0, :] - lg_e[sl, 0, :]))),
+            "replay_mismatches": int(np.sum(replay_pred != served)),
+        }
+
+    def run_audits(self) -> list[dict]:
+        """Run the deferred shadow-exact audits; returns per-request dicts.
+
+        Call after the serving burst (run()) — never interleaved with it.
+        """
+        out: list[dict] = []
+        while self._audit_pending:
+            req = self._audit_pending.pop(0)
+            t0 = time.perf_counter()
+            with obs.span("serve.audit", rid=req.rid, tier=req.tier):
+                res = self._shadow_rescore(req)
+            res["seconds"] = time.perf_counter() - t0
+            obs.async_instant(
+                "serve.request", req.rid, "audit",
+                token_agreement=res["token_agreement"],
+                max_logit_divergence=res["max_logit_divergence"])
+            obs.async_end("serve.request", req.rid, tokens=len(req.out))
+            obs.metrics.counter_inc("serve.audit.requests", tier=req.tier)
+            obs.metrics.observe("serve.audit.token_agreement",
+                                res["token_agreement"], tier=req.tier)
+            obs.metrics.observe("serve.audit.max_logit_divergence",
+                                res["max_logit_divergence"], tier=req.tier)
+            if res["replay_mismatches"]:
+                obs.metrics.counter_inc("serve.audit.replay_mismatch",
+                                        res["replay_mismatches"],
+                                        tier=req.tier)
+            self.audit_results.append(res)
+            out.append(res)
+        return out
+
+    def audit_summary(self) -> dict:
+        """Aggregate audit_results per tier (token-weighted agreement)."""
+        tiers: dict[str, dict] = {}
+        for r in self.audit_results:
+            t = tiers.setdefault(r["tier"], {
+                "requests": 0, "tokens": 0, "agree_tokens": 0.0,
+                "max_logit_divergence": 0.0, "replay_mismatches": 0})
+            t["requests"] += 1
+            t["tokens"] += r["tokens"]
+            t["agree_tokens"] += r["token_agreement"] * r["tokens"]
+            t["max_logit_divergence"] = max(t["max_logit_divergence"],
+                                            r["max_logit_divergence"])
+            t["replay_mismatches"] += r["replay_mismatches"]
+        for t in tiers.values():
+            t["token_agreement"] = t.pop("agree_tokens") / max(t["tokens"], 1)
+        return {
+            "audited_requests": len(self.audit_results),
+            "tiers": dict(sorted(tiers.items())),
+        }
 
     # --- schedule ----------------------------------------------------------
 
@@ -431,8 +605,12 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None, metavar="DIR",
                     help="write trace_serve.json + metrics_serve.json here "
                          "(implies --obs)")
+    ap.add_argument("--audit-fraction", type=float, default=0.0,
+                    help="shadow-exact audit fraction of finished requests "
+                         "(implies --obs; 0 disables)")
     args = ap.parse_args()
-    if args.trace_out is not None and args.obs is None:
+    if (args.trace_out is not None or args.audit_fraction > 0) \
+            and args.obs is None:
         args.obs = True
     if args.obs is not None:
         obs.set_enabled(args.obs)
@@ -452,7 +630,8 @@ def main() -> None:
     server = Server(cfg, meshlib.make_host_mesh(), slots=args.slots,
                     ctx=args.ctx, am_backend=args.am_backend,
                     am_policy=args.am_policy, tiers=tiers, mode=args.mode,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk,
+                    audit_fraction=args.audit_fraction)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
                     max_new=args.max_new, tier=tier_cycle[i % len(tier_cycle)])
@@ -473,6 +652,15 @@ def main() -> None:
         else:
             print(f"req {r.rid} [{r.tier}] prompt={r.prompt.tolist()} -> "
                   f"out={r.out}")
+    if args.audit_fraction > 0:
+        server.run_audits()
+        summary = server.audit_summary()
+        print(f"[serve] shadow audits: {summary['audited_requests']} "
+              f"request(s)")
+        for tier, agg in summary["tiers"].items():
+            print(f"  {tier:14s} agreement={agg['token_agreement']:.3f} "
+                  f"max_div={agg['max_logit_divergence']:.3e} "
+                  f"replay_mismatch={agg['replay_mismatches']}")
     if args.trace_out is not None:
         import pathlib
 

@@ -8,10 +8,12 @@
 
 Everything except the watchdog is gated on `REPRO_OBS` (default off, see
 `repro.obs.config`) and costs one branch when disabled. Submodules stay
-import-light: `trace`/`metrics` are stdlib+numpy only, `watchdog` is the
-single jax importer.
+import-light: `trace`/`metrics`/`numerics` are stdlib+numpy only,
+`watchdog` is the single eager jax importer (`drift` pulls the foundry in
+and is therefore NOT imported at package level — `from repro.obs import
+drift` explicitly).
 """
-from repro.obs import config, metrics, trace  # noqa: F401
+from repro.obs import config, metrics, numerics, trace  # noqa: F401
 from repro.obs.config import enabled, enabled_scope, set_enabled  # noqa: F401
 from repro.obs.trace import (  # noqa: F401
     async_begin, async_end, async_instant, export_trace, instant, span,

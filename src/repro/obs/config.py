@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import contextlib
 import os
+import pathlib
 
 
 def _env_default() -> bool:
@@ -47,3 +48,19 @@ def enabled_scope(value: bool = True):
         yield
     finally:
         _enabled = prev
+
+
+def tagged_path(path, tag: str | None = None) -> pathlib.Path:
+    """Uniquify an export path across processes.
+
+    ``trace_serve.json`` → ``trace_serve_<pid>.json`` by default, so the
+    sharded-parity subprocesses (and any other concurrent writers) never
+    clobber each other's artifacts while still matching the CI validator's
+    ``trace_*.json`` / ``metrics_*.json`` globs. Pass an explicit ``tag``
+    to substitute for the pid, or ``tag=""`` to keep the exact filename.
+    """
+    path = pathlib.Path(path)
+    if tag == "":
+        return path
+    suffix = str(tag) if tag is not None else str(os.getpid())
+    return path.with_name(f"{path.stem}_{suffix}{path.suffix}")

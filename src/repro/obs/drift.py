@@ -1,0 +1,254 @@
+"""Error-model drift detection against the foundry-characterized baseline.
+
+The committed ``artifacts/audit_baseline.json`` pins each registered
+variant's characterized error model (surrogate moments mu/sigma and the
+paper's Table-II MRED) at a fixed (n, seed). Drift checks come in two
+flavors:
+
+* ``check_baseline`` — re-characterize the registry on an *independent*
+  operand draw (``seed+1``) and alert when a variant's re-measured MRED
+  leaves its relative band, its mu leaves the sampling-error z band, its
+  sigma ratio drifts, or the registry and baseline disagree about which
+  variants exist (a stale baseline or a silently changed emulator both
+  surface here). Runs in CI via ``benchmarks/run.py --smoke`` →
+  ``bench_fresh/audit_drift.json`` gated by ``check_regression.py``.
+
+* ``check_observed`` — compare *runtime* audit accumulators
+  (``obs/numerics.py`` snapshots, uniform-policy sites only: those map
+  1:1 onto a variant) against the baseline mu. Bands here are generous
+  (relative error of a near-cancelled dot output is heavy-tailed); the
+  point is catching a mis-registered variant or a surrogate table gone
+  stale, not re-estimating moments from serving traffic.
+
+Thresholds live in the baseline's ``meta`` block so refreshing the
+baseline (``python -m repro.obs.drift --baseline ... --update``) and
+tightening the bands are one reviewable artifact; the CI pass/fail rule
+itself lives in ``benchmarks/check_regression.py`` like every other gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+from repro.obs import metrics as obs_metrics
+
+DEFAULT_Z_BAND = 5.0
+DEFAULT_MRED_REL_BAND = 0.35
+DEFAULT_SIGMA_REL_BAND = 0.35
+DEFAULT_CHECK_N = 1 << 14
+_BASELINE_FIELDS = ("mu", "sigma", "mred", "rmsre", "mre_normal",
+                    "rmsre_normal")
+
+
+def build_baseline(names=None, *, n: int | None = None,
+                   seed: int | None = None,
+                   z_band: float = DEFAULT_Z_BAND,
+                   mred_rel_band: float = DEFAULT_MRED_REL_BAND,
+                   sigma_rel_band: float = DEFAULT_SIGMA_REL_BAND) -> dict:
+    """Characterize registered variants into a committable baseline doc."""
+    import importlib
+
+    # `repro.foundry` re-exports the characterize *function*; load
+    # the submodule explicitly.
+    fchar = importlib.import_module("repro.foundry.characterize")
+
+    n = fchar.DEFAULT_N if n is None else int(n)
+    seed = fchar.DEFAULT_SEED if seed is None else int(seed)
+    chars = fchar.characterize_variants(names, n=n, seed=seed)
+    return {
+        "meta": {
+            "n": n,
+            "seed": seed,
+            "alert_budget": 0,
+            "z_band": z_band,
+            "mred_rel_band": mred_rel_band,
+            "sigma_rel_band": sigma_rel_band,
+        },
+        "variants": {
+            name: {f: getattr(c, f) for f in _BASELINE_FIELDS}
+            for name, c in sorted(chars.items())
+        },
+    }
+
+
+def check_baseline(baseline: dict, *, n: int | None = None) -> dict:
+    """Re-characterize the registry and compare against ``baseline``.
+
+    The re-measurement uses ``baseline seed + 1`` — an independent operand
+    draw, so agreement is a statistical statement about the error model,
+    not a replay of the committed numbers.
+    """
+    import importlib
+
+    # `repro.foundry` re-exports the characterize *function*; load
+    # the submodule explicitly.
+    fchar = importlib.import_module("repro.foundry.characterize")
+
+    meta = baseline["meta"]
+    n_chk = int(n if n is not None else min(meta["n"], DEFAULT_CHECK_N))
+    seed_chk = int(meta["seed"]) + 1
+    z_band = float(meta.get("z_band", DEFAULT_Z_BAND))
+    mred_band = float(meta.get("mred_rel_band", DEFAULT_MRED_REL_BAND))
+    sigma_band = float(meta.get("sigma_rel_band", DEFAULT_SIGMA_REL_BAND))
+
+    from repro.core import schemes
+
+    registered = {nm for nm in schemes.variant_names() if nm != "exact"}
+    base_vars = dict(baseline["variants"])
+    alerts: list[str] = []
+    for nm in sorted(registered - set(base_vars)):
+        alerts.append(f"{nm}: registered variant missing from baseline "
+                      "(stale audit_baseline.json — refresh with --update)")
+    for nm in sorted(set(base_vars) - registered):
+        alerts.append(f"{nm}: baselined variant no longer registered")
+
+    names = sorted(registered & set(base_vars))
+    chars = fchar.characterize_variants(names, n=n_chk, seed=seed_chk)
+    variants: dict[str, dict] = {}
+    max_abs_z = 0.0
+    for nm in names:
+        base = base_vars[nm]
+        obs = chars[nm]
+        sigma = float(base["sigma"])
+        if sigma > 0.0:
+            # mu is a sample mean of per-multiply relative errors, so its
+            # sampling error across two independent draws is
+            # sigma * sqrt(1/n_check + 1/n_base).
+            se = sigma * np.sqrt(1.0 / n_chk + 1.0 / meta["n"])
+            z = (obs.mu - base["mu"]) / se
+        else:
+            z = 0.0 if obs.mu == base["mu"] else np.inf
+        max_abs_z = max(max_abs_z, abs(float(z)))
+        mred_base = max(float(base["mred"]), 1e-9)
+        mred_drift = abs(obs.mred - base["mred"]) / mred_base
+        sigma_drift = (abs(obs.sigma - sigma) / max(sigma, 1e-9)
+                       if sigma > 0.0 else (0.0 if obs.sigma == 0.0
+                                            else np.inf))
+        row = {
+            "mu": obs.mu, "sigma": obs.sigma, "mred": obs.mred,
+            "mu_z": float(z), "mred_rel_drift": float(mred_drift),
+            "sigma_rel_drift": float(sigma_drift),
+        }
+        variants[nm] = row
+        if abs(float(z)) > z_band:
+            alerts.append(f"{nm}: mu calibration z={float(z):+.2f} outside "
+                          f"±{z_band}")
+        if mred_drift > mred_band:
+            alerts.append(f"{nm}: MRED drift {mred_drift:.1%} outside "
+                          f"±{mred_band:.0%} ({base['mred']:.3e} -> "
+                          f"{obs.mred:.3e})")
+        if sigma_drift > sigma_band:
+            alerts.append(f"{nm}: sigma drift {sigma_drift:.1%} outside "
+                          f"±{sigma_band:.0%}")
+    for a in alerts:
+        obs_metrics.counter_inc("numerics.drift.alert", 1, kind="baseline")
+    return {
+        "n_check": n_chk,
+        "seed_check": seed_chk,
+        "variants_checked": len(names),
+        "max_abs_mu_z": float(max_abs_z),
+        "alert_count": len(alerts),
+        "alerts": alerts,
+        "variants": variants,
+    }
+
+
+def _variant_of_label(variant_label: str) -> str | None:
+    """Audit variant labels that map 1:1 onto a registered variant."""
+    if variant_label.startswith("uniform:"):
+        return variant_label.split(":", 1)[1]
+    return None
+
+
+def check_observed(audit_snapshot: dict, baseline: dict, *,
+                   min_count: int = 256) -> dict:
+    """Compare runtime audit accumulators against the baseline's mu.
+
+    Only uniform-policy sites are checked (mixed interleavings average
+    several variants' moments). The band is deliberately generous —
+    ``max(5e-3, z_band * sigma)`` — because per-element relative error of
+    a dot output is heavy-tailed under cancellation; a stale surrogate
+    table or mis-registered variant overshoots it by orders of magnitude.
+    """
+    meta = baseline["meta"]
+    z_band = float(meta.get("z_band", DEFAULT_Z_BAND))
+    alerts: list[str] = []
+    checked = 0
+    for key, acc in audit_snapshot.get("sites", {}).items():
+        site, backend, label = key.split("|", 2)
+        vname = _variant_of_label(label)
+        if vname is None or acc["count"] < min_count:
+            continue
+        base = baseline["variants"].get(vname)
+        if base is None:
+            alerts.append(f"{key}: runtime traffic on unbaselined variant "
+                          f"{vname!r}")
+            continue
+        checked += 1
+        band = max(5e-3, z_band * float(base["sigma"]))
+        dev = abs(acc["mean_rel"] - float(base["mu"]))
+        if dev > band:
+            alerts.append(
+                f"{key}: realized mean rel error {acc['mean_rel']:+.3e} "
+                f"deviates {dev:.3e} from characterized mu "
+                f"{base['mu']:+.3e} (band {band:.3e})")
+    for a in alerts:
+        obs_metrics.counter_inc("numerics.drift.alert", 1, kind="observed")
+    return {"sites_checked": checked, "alert_count": len(alerts),
+            "alerts": alerts}
+
+
+def load_baseline(path) -> dict:
+    return json.loads(pathlib.Path(path).read_text())
+
+
+def save_baseline(baseline: dict, path) -> pathlib.Path:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(baseline, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Check or refresh the AM error-model drift baseline")
+    ap.add_argument("--baseline", default="artifacts/audit_baseline.json")
+    ap.add_argument("--update", action="store_true",
+                    help="re-characterize and rewrite the baseline")
+    ap.add_argument("--check", action="store_true",
+                    help="re-characterize on an independent draw and alert "
+                         "on drift (default when --update is absent)")
+    ap.add_argument("--n", type=int, default=None,
+                    help="operands per variant (build default 2^16, "
+                         "check default min(baseline, 2^14))")
+    ap.add_argument("--out", default=None,
+                    help="also write the check report JSON here")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        doc = build_baseline(n=args.n)
+        p = save_baseline(doc, args.baseline)
+        print(f"wrote {p}: {len(doc['variants'])} variants at "
+              f"n={doc['meta']['n']}")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    report = check_baseline(baseline, n=args.n)
+    if args.out:
+        out = pathlib.Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report, indent=1) + "\n")
+    print(f"drift check: {report['variants_checked']} variants, "
+          f"max |mu z| {report['max_abs_mu_z']:.2f}, "
+          f"{report['alert_count']} alert(s)")
+    for a in report["alerts"]:
+        print(f"  ALERT {a}")
+    return 1 if report["alert_count"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,11 +24,19 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
+import re
 import threading
+import warnings
 
 import numpy as np
 
 from repro.obs import config
+
+# Max distinct label sets per metric name. A per-request (or otherwise
+# unbounded) label value would grow the registry without bound over a long
+# serving run; past the cap, new series collapse into one __overflow__
+# bucket per name (warn once) instead of OOMing the process.
+DEFAULT_SERIES_CAP = 256
 
 
 def _series_key(name: str, labels: dict) -> str:
@@ -38,28 +46,57 @@ def _series_key(name: str, labels: dict) -> str:
     return f"{name}{{{inner}}}"
 
 
+def _overflow_key(name: str) -> str:
+    return f"{name}{{__overflow__=true}}"
+
+
 class MetricsRegistry:
     """Thread-safe registry of labeled counters, gauges and histograms."""
 
-    def __init__(self):
+    def __init__(self, series_cap: int = DEFAULT_SERIES_CAP):
         self._lock = threading.Lock()
+        self._series_cap = int(series_cap)
         self._counters: dict[str, float] = {}
         self._gauges: dict[str, float] = {}
         self._hists: dict[str, list[float]] = {}
+        self._series_per_name: dict[str, int] = {}
+        self._overflowed: set[str] = set()
+
+    def _admit(self, store: dict, name: str, key: str) -> str:
+        """Cap distinct series per metric name (caller holds the lock)."""
+        if key in store:
+            return key
+        n = self._series_per_name.get(name, 0)
+        if n >= self._series_cap:
+            if name not in self._overflowed:
+                self._overflowed.add(name)
+                warnings.warn(
+                    f"metric {name!r} exceeded {self._series_cap} distinct "
+                    "label sets; further new series collapse into "
+                    "__overflow__ (unbounded label value?)",
+                    RuntimeWarning,
+                    stacklevel=4,
+                )
+            return _overflow_key(name)
+        self._series_per_name[name] = n + 1
+        return key
 
     def counter_inc(self, name: str, value: float = 1, **labels) -> None:
         key = _series_key(name, labels)
         with self._lock:
+            key = self._admit(self._counters, name, key)
             self._counters[key] = self._counters.get(key, 0) + value
 
     def gauge_set(self, name: str, value: float, **labels) -> None:
         key = _series_key(name, labels)
         with self._lock:
+            key = self._admit(self._gauges, name, key)
             self._gauges[key] = value
 
     def observe(self, name: str, value: float, **labels) -> None:
         key = _series_key(name, labels)
         with self._lock:
+            key = self._admit(self._hists, name, key)
             self._hists.setdefault(key, []).append(float(value))
 
     def get_counter(self, name: str, **labels) -> float:
@@ -92,6 +129,8 @@ class MetricsRegistry:
             self._counters.clear()
             self._gauges.clear()
             self._hists.clear()
+            self._series_per_name.clear()
+            self._overflowed.clear()
 
 
 REGISTRY = MetricsRegistry()
@@ -127,12 +166,85 @@ def _json_default(o):
     return str(o)
 
 
-def export_metrics(path) -> pathlib.Path:
-    """Write the registry snapshot as JSON (diff/gate-friendly schema)."""
-    path = pathlib.Path(path)
+def export_metrics(path, tag: str | None = None) -> pathlib.Path:
+    """Write the registry snapshot as JSON (diff/gate-friendly schema).
+
+    The filename is pid-uniquified by default (``metrics_x.json`` →
+    ``metrics_x_<pid>.json``) so concurrent processes never clobber each
+    other; pass ``tag=""`` to keep the exact name, or a string tag to
+    substitute for the pid. Globs like ``metrics_*.json`` still match.
+    """
+    path = config.tagged_path(path, tag)
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(snapshot(), indent=1, default=_json_default))
     return path
+
+
+# --- snapshot schema validation (CI "Validate trace artifacts" step) --------
+
+_SERIES_RE = re.compile(r"^[\w.\-]+(\{[^{}]*\})?$")
+_HIST_KEYS = {"count", "sum", "min", "max", "p50", "p99"}
+
+
+def _series_label_keys(series: str) -> tuple[str, str] | None:
+    """Split ``name{k=v,...}`` → (name, sorted label-key csv); None if bad."""
+    if not _SERIES_RE.match(series):
+        return None
+    if "{" not in series:
+        return series, ""
+    name, _, rest = series.partition("{")
+    pairs = rest[:-1].split(",") if rest[:-1] else []
+    keys = []
+    for p in pairs:
+        if "=" not in p:
+            return None
+        keys.append(p.split("=", 1)[0])
+    return name, ",".join(sorted(keys))
+
+
+def validate_metrics_snapshot(doc) -> list[str]:
+    """Schema-check an exported metrics snapshot; returns error strings.
+
+    Beyond shape/type checks this enforces the PR-9 convention that label
+    sets are STABLE per metric name: every series of one name must carry
+    the same label keys (the ``__overflow__`` bucket is exempt).
+    """
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return ["snapshot is not a JSON object"]
+    missing = {"counters", "gauges", "histograms"} - set(doc)
+    if missing:
+        errors.append(f"missing top-level keys: {sorted(missing)}")
+    label_sets: dict[str, set[str]] = {}
+    for kind in ("counters", "gauges"):
+        for series, value in doc.get(kind, {}).items():
+            if not isinstance(value, (int, float)) or isinstance(value, bool):
+                errors.append(f"{kind}[{series}]: non-numeric value {value!r}")
+            parsed = _series_label_keys(series)
+            if parsed is None:
+                errors.append(f"{kind}[{series}]: malformed series key")
+                continue
+            name, keys = parsed
+            if "__overflow__" not in keys:
+                label_sets.setdefault(name, set()).add(keys)
+    for series, summary in doc.get("histograms", {}).items():
+        if _series_label_keys(series) is None:
+            errors.append(f"histograms[{series}]: malformed series key")
+        if not isinstance(summary, dict) or set(summary) != _HIST_KEYS:
+            errors.append(
+                f"histograms[{series}]: expected keys {sorted(_HIST_KEYS)}"
+            )
+        elif not all(
+            isinstance(v, (int, float)) and not isinstance(v, bool)
+            for v in summary.values()
+        ):
+            errors.append(f"histograms[{series}]: non-numeric summary value")
+    for name, seen in sorted(label_sets.items()):
+        if len(seen) > 1:
+            errors.append(
+                f"unstable label set for metric {name!r}: {sorted(seen)}"
+            )
+    return errors
 
 
 # --- shared stats-dataclass derivation --------------------------------------

@@ -1,0 +1,319 @@
+"""Online numerics auditing: realized AM error accumulators + sampling.
+
+The repo's whole premise is a *controlled* trade of multiplication error
+for hardware cost, but the control loop is offline (foundry
+characterization). This module is the runtime side of that loop: when an
+audited call re-runs on the exact backend, the realized signed relative
+errors stream into per-``(site, backend, variant)`` accumulators —
+count, mean/var of signed relative error, MRED (mean |rel|), max |rel|,
+and a fixed log-binned histogram — plus a calibration z-score of the
+realized mean against the surrogate-predicted (mu, sigma). ``publish()``
+pushes everything into the PR-9 metrics registry with *stable label
+sets*, so it rides the existing ``export_metrics`` path.
+
+Sampling is deterministic and schedule-invariant by construction: the
+decision is a pure hash of the call's global CRN key (plus the site
+name), never of wall-clock, schedule position, shard index, or slot —
+the same invariant that makes the surrogate's CRN noise reproducible
+makes the audited-call set reproducible. See
+``tests/test_numerics_audit.py`` for the property sweep.
+
+Everything here is off unless BOTH ``REPRO_OBS`` observability is on and
+an audit fraction > 0 is configured (``REPRO_AUDIT_FRACTION`` env or
+``configure()``): ``audit_active()`` is a single branch when disabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+import os
+import threading
+
+import numpy as np
+
+from repro.obs import config
+from repro.obs import metrics as obs_metrics
+
+# ---------------------------------------------------------------------------
+# Audit configuration (process-wide, like the REPRO_OBS switch)
+# ---------------------------------------------------------------------------
+
+
+def _env_fraction() -> float:
+    raw = os.environ.get("REPRO_AUDIT_FRACTION", "").strip()
+    if not raw:
+        return 0.0
+    try:
+        return min(1.0, max(0.0, float(raw)))
+    except ValueError:
+        return 0.0
+
+
+_fraction: float = _env_fraction()
+_max_rows: int = 64  # rows of a sampled matmul re-run on the exact backend
+_max_images: int = 2  # batch images of a sampled conv re-run exactly
+
+
+def configure(fraction: float | None = None, max_rows: int | None = None,
+              max_images: int | None = None) -> None:
+    """Set the engine audit sampling fraction and re-run tile caps."""
+    global _fraction, _max_rows, _max_images
+    if fraction is not None:
+        _fraction = min(1.0, max(0.0, float(fraction)))
+    if max_rows is not None:
+        _max_rows = max(1, int(max_rows))
+    if max_images is not None:
+        _max_images = max(1, int(max_images))
+
+
+def audit_fraction() -> float:
+    return _fraction
+
+
+def audit_max_rows() -> int:
+    return _max_rows
+
+
+def audit_max_images() -> int:
+    return _max_images
+
+
+def audit_active() -> bool:
+    """One branch on the hot path: audits need obs on AND a fraction set."""
+    return _fraction > 0.0 and config.enabled()
+
+
+# ---------------------------------------------------------------------------
+# Deterministic sampling (CRN-style: a pure function of the call key)
+# ---------------------------------------------------------------------------
+
+
+def _key_bytes(key) -> bytes:
+    """Concrete bytes identifying a call key (JAX PRNG key, int, or bytes)."""
+    if isinstance(key, (bytes, bytearray)):
+        return bytes(key)
+    if isinstance(key, (int, np.integer)):
+        return int(key).to_bytes(16, "little", signed=True)
+    try:
+        arr = np.asarray(key)
+    except TypeError:
+        arr = None
+    if arr is None or arr.dtype.kind in "OV":  # new-style typed PRNG key
+        import jax
+
+        arr = np.asarray(jax.random.key_data(key))
+    return arr.tobytes()
+
+
+def sample_u(key, site: str = "") -> float:
+    """Uniform [0,1) deterministically derived from (key, site).
+
+    Pure in its inputs: independent of schedule, shard count, or slot
+    placement, and distinct from the CRN noise stream itself (domain-
+    separated by the ``repro.audit`` prefix) so auditing never perturbs
+    the sampled computation.
+    """
+    h = hashlib.blake2b(digest_size=8)
+    h.update(b"repro.audit\x00")
+    h.update(site.encode())
+    h.update(b"\x00")
+    h.update(_key_bytes(key))
+    return int.from_bytes(h.digest(), "little") / 2.0**64
+
+
+def sample_decision(key, site: str = "", fraction: float | None = None) -> bool:
+    """Should this call be audited? Monotone in ``fraction`` (u < f)."""
+    f = _fraction if fraction is None else fraction
+    if f <= 0.0:
+        return False
+    return sample_u(key, site) < f
+
+
+def request_sample_u(salt: int, rid: str) -> float:
+    """Serving-audit variant: keyed by (server seed, request id) only —
+    invariant to slot placement, batch schedule, and server mode."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(b"repro.audit.serve\x00")
+    h.update(int(salt).to_bytes(16, "little", signed=True))
+    h.update(b"\x00")
+    h.update(rid.encode())
+    return int.from_bytes(h.digest(), "little") / 2.0**64
+
+
+# ---------------------------------------------------------------------------
+# Streaming error accumulators
+# ---------------------------------------------------------------------------
+
+# |rel error| decade bins: (-inf,1e-9], (1e-9,1e-8], ..., (1e-1,1], (1, inf).
+LOG_BIN_EDGES: tuple[float, ...] = tuple(10.0**e for e in range(-9, 1))
+_BIN_LABELS: tuple[str, ...] = tuple(
+    f"le_1e{e:+d}" for e in range(-9, 1)
+) + ("gt_1e+00",)
+
+
+@dataclasses.dataclass
+class ErrorAccumulator:
+    """Streaming moments of signed relative error at one audit site."""
+
+    count: int = 0
+    total: float = 0.0
+    total_sq: float = 0.0
+    total_abs: float = 0.0
+    max_abs: float = 0.0
+    bins: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(len(LOG_BIN_EDGES) + 1, np.int64)
+    )
+    z_count: int = 0
+    z_total_abs: float = 0.0
+    z_max_abs: float = 0.0
+    z_last: float = 0.0
+
+    def update(self, rel: np.ndarray) -> None:
+        rel = np.asarray(rel, np.float64).ravel()
+        if rel.size == 0:
+            return
+        self.count += int(rel.size)
+        self.total += float(rel.sum())
+        self.total_sq += float(np.square(rel).sum())
+        a = np.abs(rel)
+        self.total_abs += float(a.sum())
+        self.max_abs = max(self.max_abs, float(a.max()))
+        self.bins += np.bincount(
+            np.searchsorted(LOG_BIN_EDGES, a, side="left"),
+            minlength=len(LOG_BIN_EDGES) + 1,
+        ).astype(np.int64)
+
+    def update_z(self, z: float) -> None:
+        if not math.isfinite(z):
+            return
+        self.z_count += 1
+        self.z_total_abs += abs(z)
+        self.z_max_abs = max(self.z_max_abs, abs(z))
+        self.z_last = float(z)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    @property
+    def var(self) -> float:
+        if not self.count:
+            return 0.0
+        return max(0.0, self.total_sq / self.count - self.mean**2)
+
+    @property
+    def mred(self) -> float:
+        """Mean relative error distance — the paper's Table-II headline."""
+        return self.total_abs / self.count if self.count else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "count": self.count,
+            "mean_rel": self.mean,
+            "var_rel": self.var,
+            "mred": self.mred,
+            "max_abs_rel": self.max_abs,
+            "bins": {lbl: int(n) for lbl, n in zip(_BIN_LABELS, self.bins)},
+            "z_count": self.z_count,
+            "z_mean_abs": (self.z_total_abs / self.z_count
+                           if self.z_count else 0.0),
+            "z_max_abs": self.z_max_abs,
+            "z_last": self.z_last,
+        }
+
+
+class NumericsAudit:
+    """Thread-safe registry of accumulators keyed (site, backend, variant)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._accs: dict[tuple[str, str, str], ErrorAccumulator] = {}
+
+    def record(self, site: str, backend: str, variant: str,
+               rel: np.ndarray, z: float | None = None) -> None:
+        key = (str(site), str(backend), str(variant))
+        with self._lock:
+            acc = self._accs.get(key)
+            if acc is None:
+                acc = self._accs[key] = ErrorAccumulator()
+            acc.update(rel)
+            if z is not None:
+                acc.update_z(float(z))
+        obs_metrics.counter_inc(
+            "numerics.audit.sampled", 1, site=site, backend=backend
+        )
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "sites": {
+                    f"{s}|{b}|{v}": acc.as_dict()
+                    for (s, b, v), acc in sorted(self._accs.items())
+                }
+            }
+
+    def items(self) -> list[tuple[tuple[str, str, str], ErrorAccumulator]]:
+        with self._lock:
+            return sorted(self._accs.items())
+
+    def publish(self) -> None:
+        """Push current accumulator state into the obs metrics registry.
+
+        Gauges carry one stable label set per metric name (site, backend,
+        variant); histogram decades go out as labeled counters. No-op
+        when observability is disabled (the registry calls are gated).
+        """
+        for (site, backend, variant), acc in self.items():
+            labels = {"site": site, "backend": backend, "variant": variant}
+            obs_metrics.gauge_set("numerics.audit.count", acc.count, **labels)
+            obs_metrics.gauge_set("numerics.audit.mean_rel", acc.mean, **labels)
+            obs_metrics.gauge_set("numerics.audit.mred", acc.mred, **labels)
+            obs_metrics.gauge_set(
+                "numerics.audit.max_abs_rel", acc.max_abs, **labels
+            )
+            if acc.z_count:
+                obs_metrics.gauge_set(
+                    "numerics.audit.calibration_z", acc.z_last, **labels
+                )
+                obs_metrics.gauge_set(
+                    "numerics.audit.calibration_z_max_abs", acc.z_max_abs,
+                    **labels,
+                )
+            for lbl, n in zip(_BIN_LABELS, acc.bins):
+                if n:
+                    obs_metrics.counter_inc(
+                        "numerics.audit.rel_bin", int(n), bin=lbl, **labels
+                    )
+
+    def reset(self) -> None:
+        with self._lock:
+            self._accs.clear()
+
+
+AUDIT = NumericsAudit()
+
+
+def record(site: str, backend: str, variant: str, rel, z=None) -> None:
+    AUDIT.record(site, backend, variant, rel, z)
+
+
+def snapshot() -> dict:
+    return AUDIT.snapshot()
+
+
+def publish() -> None:
+    AUDIT.publish()
+
+
+def reset() -> None:
+    AUDIT.reset()
+
+
+def relative_error(approx: np.ndarray, exact: np.ndarray,
+                   tiny: float = 1e-30) -> np.ndarray:
+    """Signed relative error with exact-zero outputs masked out."""
+    approx = np.asarray(approx, np.float64)
+    exact = np.asarray(exact, np.float64)
+    mask = np.abs(exact) > tiny
+    return ((approx[mask] - exact[mask]) / exact[mask]).ravel()

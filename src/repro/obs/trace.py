@@ -186,9 +186,16 @@ def _json_default(o):
     return str(o)
 
 
-def export_trace(path) -> pathlib.Path:
-    """Write the recorded events as a Chrome trace-event JSON document."""
-    path = pathlib.Path(path)
+def export_trace(path, tag: str | None = None) -> pathlib.Path:
+    """Write the recorded events as a Chrome trace-event JSON document.
+
+    The filename is pid-uniquified by default (``trace_x.json`` →
+    ``trace_x_<pid>.json``) so concurrent writers (e.g. the sharded-parity
+    subprocesses) never collide; pass ``tag=""`` to keep the exact name,
+    or a string tag to substitute for the pid. ``trace_*.json`` globs
+    still match either way.
+    """
+    path = config.tagged_path(path, tag)
     path.parent.mkdir(parents=True, exist_ok=True)
     doc = {"traceEvents": events(), "displayTimeUnit": "ms"}
     path.write_text(json.dumps(doc, indent=1, default=_json_default))
@@ -234,7 +241,7 @@ def validate_chrome_trace(doc) -> list[str]:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="Validate Chrome trace-event JSON files")
+        description="Validate trace-event and metrics-snapshot JSON files")
     ap.add_argument("--validate", nargs="+", required=True, metavar="FILE")
     args = ap.parse_args(argv)
     rc = 0
@@ -246,15 +253,31 @@ def main(argv=None) -> int:
             print(f"FAIL  {p}: {e}")
             rc = 1
             continue
-        problems = validate_chrome_trace(doc)
+        # Dispatch by schema sniff so one CLI covers both artifact kinds:
+        # trace_*.json carries 'traceEvents', metrics_*.json the flat
+        # counters/gauges/histograms snapshot.
+        if isinstance(doc, dict) and "traceEvents" in doc:
+            problems = validate_chrome_trace(doc)
+            kind = f"{len(doc['traceEvents'])} events, Chrome trace-event"
+        elif isinstance(doc, dict) and {"counters", "gauges"} <= set(doc):
+            from repro.obs import metrics as obs_metrics
+
+            problems = obs_metrics.validate_metrics_snapshot(doc)
+            n = sum(len(doc.get(k, {}))
+                    for k in ("counters", "gauges", "histograms"))
+            kind = f"{n} series, metrics-snapshot"
+        else:
+            problems = ["unrecognized document: neither a Chrome trace "
+                        "('traceEvents') nor a metrics snapshot "
+                        "('counters'/'gauges')"]
+            kind = ""
         if problems:
             rc = 1
             print(f"FAIL  {p}: {len(problems)} problem(s)")
             for msg in problems[:20]:
                 print(f"      {msg}")
         else:
-            n = len(doc["traceEvents"])
-            print(f"ok    {p}: {n} events, Chrome trace-event schema valid")
+            print(f"ok    {p}: {kind} schema valid")
     return rc
 
 

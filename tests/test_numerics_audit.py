@@ -1,0 +1,330 @@
+"""Numerics auditing: deterministic sampling, engine audit hook, drift.
+
+The sampling invariants mirror the CRN contract tests in
+tests/test_engine_property.py: the audit decision for a call is a pure
+function of its global call key (+ site label), so the audited-call set
+cannot depend on batch schedule, shard count, or slot placement. Fixed
+cases live here; tests/test_numerics_audit_property.py widens them with
+hypothesis when installed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import engine
+from repro.launch import mesh as meshlib
+from repro.launch.serve import Request, Server
+from repro.models import registry as R
+from repro.obs import config as obs_config, metrics, numerics, trace
+
+
+@pytest.fixture(autouse=True)
+def _clean_audit():
+    prior = obs_config.enabled()
+    prior_f = numerics.audit_fraction()
+    obs_config.set_enabled(False)
+    trace.reset()
+    metrics.reset()
+    numerics.reset()
+    yield
+    obs_config.set_enabled(prior)
+    numerics.configure(fraction=prior_f)
+    trace.reset()
+    metrics.reset()
+    numerics.reset()
+
+
+# ---------------------------------------------------------------------------
+# sampling: pure in (key, site), monotone in fraction
+# ---------------------------------------------------------------------------
+
+
+def test_sample_u_deterministic_and_key_representation_invariant():
+    k_old = jax.random.PRNGKey(7)
+    u = numerics.sample_u(k_old, "matmul")
+    assert 0.0 <= u < 1.0
+    assert numerics.sample_u(k_old, "matmul") == u
+    # the new-style typed key with the same data hashes identically
+    assert numerics.sample_u(jax.random.key(7), "matmul") == u
+    # raw numpy key data too (what a host callback would hold)
+    assert numerics.sample_u(np.asarray(k_old), "matmul") == u
+    # site and key both separate the stream
+    assert numerics.sample_u(k_old, "conv2d") != u
+    assert numerics.sample_u(jax.random.fold_in(k_old, 1), "matmul") != u
+
+
+def test_sample_decision_fraction_monotone_and_calibrated():
+    keys = [jax.random.fold_in(jax.random.PRNGKey(0), i) for i in range(400)]
+    hits = {f: {i for i, k in enumerate(keys)
+                if numerics.sample_decision(k, "s", fraction=f)}
+            for f in (0.0, 0.1, 0.5, 1.0)}
+    assert hits[0.0] == set()
+    assert hits[1.0] == set(range(400))
+    assert hits[0.1] <= hits[0.5]  # u < f is monotone: nested sample sets
+    assert 0.02 <= len(hits[0.1]) / 400 <= 0.25
+    assert 0.35 <= len(hits[0.5]) / 400 <= 0.65
+
+
+def test_request_sample_u_keyed_by_salt_and_rid_only():
+    u = numerics.request_sample_u(0, "3")
+    assert numerics.request_sample_u(0, "3") == u
+    assert numerics.request_sample_u(1, "3") != u
+    assert numerics.request_sample_u(0, "4") != u
+
+
+# ---------------------------------------------------------------------------
+# engine audit hook
+# ---------------------------------------------------------------------------
+
+
+def _probe(eng, key, backend="surrogate_fused", site="t.mm"):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 16)).astype(np.float32)
+    return eng.matmul(x, w, "uniform:pm_csi", backend=backend, key=key,
+                      site=site)
+
+
+def test_engine_audit_records_without_perturbing_output():
+    eng = engine.AMEngine()
+    key = jax.random.PRNGKey(3)
+    y_off = np.asarray(_probe(eng, key))
+    with obs.enabled_scope(True):
+        numerics.configure(fraction=1.0)
+        y_on = np.asarray(_probe(eng, key))
+    np.testing.assert_array_equal(y_on, y_off)
+    items = numerics.AUDIT.items()
+    assert [k for k, _ in items] == [("t.mm", "surrogate_fused",
+                                      "uniform:pm_csi")]
+    acc = items[0][1]
+    assert acc.count > 0 and np.isfinite(acc.mred)
+    assert acc.z_count == 1 and np.isfinite(acc.z_last)
+    # realized error: surrogate moments are ~1e-7-scale for paper variants
+    assert 0.0 < acc.mred < 1e-4
+    # publish() lands in the metrics registry with a stable label set
+    with obs.enabled_scope(True):
+        numerics.publish()
+        snap = metrics.snapshot()
+    assert metrics.validate_metrics_snapshot(snap) == []
+    assert snap["gauges"][
+        "numerics.audit.count{backend=surrogate_fused,site=t.mm,"
+        "variant=uniform:pm_csi}"] == acc.count
+
+
+def test_engine_audit_off_paths_record_nothing():
+    eng = engine.AMEngine()
+    key = jax.random.PRNGKey(3)
+    # obs disabled entirely
+    numerics.configure(fraction=1.0)
+    _probe(eng, key)
+    assert numerics.AUDIT.items() == []
+    with obs.enabled_scope(True):
+        # fraction zero
+        numerics.configure(fraction=0.0)
+        _probe(eng, key)
+        assert numerics.AUDIT.items() == []
+        numerics.configure(fraction=1.0)
+        # exact backend: nothing to audit against
+        _probe(eng, key, backend="exact")
+        # no key: no CRN identity to sample on (bit-exact backends are
+        # deterministic and accept key=None)
+        rng = np.random.default_rng(0)
+        eng.matmul(rng.standard_normal((4, 64)).astype(np.float32),
+                   rng.standard_normal((64, 16)).astype(np.float32),
+                   "uniform:pm_csi", backend="bitexact_ref")
+        assert numerics.AUDIT.items() == []
+
+
+def test_engine_audit_skips_traced_calls():
+    eng = engine.AMEngine()
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 16)).astype(np.float32)
+
+    @jax.jit
+    def f(x, w, key):
+        return eng.matmul(x, w, "uniform:pm_csi", backend="surrogate_xla",
+                          key=key, site="t.jit")
+
+    with obs.enabled_scope(True):
+        numerics.configure(fraction=1.0)
+        f(x, w, jax.random.PRNGKey(3)).block_until_ready()
+    assert numerics.AUDIT.items() == []
+
+
+def test_engine_audit_sampled_set_is_schedule_invariant():
+    eng = engine.AMEngine()
+    keys = [jax.random.fold_in(jax.random.PRNGKey(0), i) for i in range(8)]
+
+    def sampled_counts(order):
+        numerics.reset()
+        for i in order:
+            _probe(eng, keys[i], site=f"site{i}")
+        return {k: acc.count for k, acc in numerics.AUDIT.items()}
+
+    with obs.enabled_scope(True):
+        numerics.configure(fraction=0.5)
+        fwd = sampled_counts(range(8))
+        rev = sampled_counts(reversed(range(8)))
+    assert fwd == rev
+    assert 0 < len(fwd) < 8  # fraction 0.5 really is a nontrivial subset
+
+
+def test_engine_audit_conv2d_site():
+    eng = engine.AMEngine()
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((2, 8, 8, 16)).astype(np.float32)
+    w = rng.standard_normal((8, 3, 3, 16)).astype(np.float32)  # (F,kh,kw,C)
+    with obs.enabled_scope(True):
+        numerics.configure(fraction=1.0)
+        y_on = np.asarray(eng.conv2d(x, w, "uniform:pm_csi",
+                                     backend="surrogate_fused",
+                                     key=jax.random.PRNGKey(5), site="t.cv"))
+    y_off = np.asarray(eng.conv2d(x, w, "uniform:pm_csi",
+                                  backend="surrogate_fused",
+                                  key=jax.random.PRNGKey(5), site="t.cv"))
+    np.testing.assert_array_equal(y_on, y_off)
+    items = numerics.AUDIT.items()
+    assert [k for k, _ in items] == [("t.cv", "surrogate_fused",
+                                      "uniform:pm_csi")]
+    assert items[0][1].count > 0
+
+
+# ---------------------------------------------------------------------------
+# serving: audit sampling invariant to slots/mode; shadow rescore agrees
+# ---------------------------------------------------------------------------
+
+
+def _mixed_requests(cfg, n, max_new=3):
+    rng = np.random.default_rng(0)
+    tiers = ("exact", "conservative", "aggressive")
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, 3 + i % 3).astype(
+                        np.int32),
+                    max_new=max_new, tier=tiers[i % 3])
+            for i in range(n)]
+
+
+def test_serving_audit_sampling_invariant_to_slots_and_mode():
+    cfg = R.get("xlstm-125m").smoke
+    mesh = meshlib.make_host_mesh()
+    tiers = {"exact": None, "conservative": "uniform:pm_csi",
+             "aggressive": "rr:8"}
+    reqs = _mixed_requests(cfg, 12)
+    decisions = {}
+    with obs.enabled_scope(True):
+        for slots, mode in ((2, "batched"), (4, "batched"), (2, "per_slot")):
+            sv = Server(cfg, mesh, slots=slots, ctx=64, tiers=tiers,
+                        mode=mode, audit_fraction=0.5)
+            decisions[(slots, mode)] = [sv._audit_sampled(r) for r in reqs]
+    vals = list(decisions.values())
+    assert all(v == vals[0] for v in vals[1:])
+    assert 0 < sum(vals[0]) < len(reqs)  # nontrivial subset at f=0.5
+    # fraction=0 or obs off: nothing sampled
+    sv0 = Server(cfg, mesh, slots=2, ctx=64, tiers=tiers, audit_fraction=0.0)
+    with obs.enabled_scope(True):
+        assert not any(sv0._audit_sampled(r) for r in reqs)
+    sv1 = Server(cfg, mesh, slots=2, ctx=64, tiers=tiers, audit_fraction=1.0)
+    assert not any(sv1._audit_sampled(r) for r in reqs)  # obs off
+
+
+@pytest.mark.slow
+def test_serving_shadow_rescore_end_to_end():
+    cfg = R.get("xlstm-125m").smoke
+    mesh = meshlib.make_host_mesh()
+    tiers = {"exact": None, "conservative": "uniform:pm_csi"}
+    with obs.enabled_scope(True):
+        sv = Server(cfg, mesh, slots=2, ctx=64, tiers=tiers,
+                    audit_fraction=1.0)
+        for r in _mixed_requests(cfg, 2):
+            r.tier = "conservative" if r.rid else "exact"
+            sv.submit(r)
+        done = sv.run()
+        assert all(r.status == "done" for r in done)
+        results = sv.run_audits()
+    assert len(results) == 2
+    for res in results:
+        # tier replay must reproduce the served tokens bitwise (the
+        # slot-isolation contract), and exact-tier audits agree exactly.
+        assert res["replay_mismatches"] == 0
+        if res["tier"] == "exact":
+            assert res["token_agreement"] == 1.0
+            assert res["max_logit_divergence"] == 0.0
+    summary = sv.audit_summary()
+    assert summary["audited_requests"] == 2
+    assert set(summary["tiers"]) == {"exact", "conservative"}
+
+
+# ---------------------------------------------------------------------------
+# drift detection
+# ---------------------------------------------------------------------------
+
+
+def test_drift_baseline_roundtrip_and_alerts(tmp_path):
+    from repro.obs import drift
+
+    base = drift.build_baseline(n=1 << 10)  # full registry, test-sized n
+    p = drift.save_baseline(base, tmp_path / "b.json")
+    base = drift.load_baseline(p)
+    report = drift.check_baseline(base, n=1 << 10)
+    assert report["alert_count"] == 0
+    assert report["variants_checked"] == len(base["variants"])
+    # a variant registered but missing from the baseline alerts
+    stale = {"meta": dict(base["meta"]),
+             "variants": {nm: dict(v) for nm, v in base["variants"].items()
+                          if nm != "nm_ni"}}
+    report = drift.check_baseline(stale, n=1 << 10)
+    assert any("nm_ni" in a and "missing from baseline" in a
+               for a in report["alerts"])
+    # a grossly shifted mu alerts (the calibration z explodes)
+    bad = {"meta": dict(base["meta"]),
+           "variants": {nm: dict(v) for nm, v in base["variants"].items()}}
+    bad["variants"]["pm_csi"]["mu"] += 1e-3
+    report = drift.check_baseline(bad, n=1 << 10)
+    assert any("pm_csi" in a and "mu calibration" in a
+               for a in report["alerts"])
+
+
+def test_drift_check_observed(tmp_path):
+    from repro.obs import drift
+
+    base = drift.build_baseline(["pm_csi"], n=1 << 10)
+    mu = base["variants"]["pm_csi"]["mu"]
+    rng = np.random.default_rng(0)
+
+    def snap_with(mean):
+        numerics.reset()
+        numerics.record("s", "surrogate_fused", "uniform:pm_csi",
+                        rng.standard_normal(512) * 1e-7 + mean)
+        return numerics.snapshot()
+
+    ok = drift.check_observed(snap_with(mu), base)
+    assert ok["alert_count"] == 0 and ok["sites_checked"] == 1
+    bad = drift.check_observed(snap_with(mu + 0.1), base)
+    assert bad["alert_count"] == 1
+    # unbaselined variant traffic alerts; mixed policies are skipped
+    numerics.reset()
+    numerics.record("s", "surrogate_fused", "uniform:nm_ni",
+                    np.zeros(512))
+    numerics.record("s", "surrogate_fused", "rr:8", np.zeros(512))
+    rep = drift.check_observed(numerics.snapshot(), base)
+    assert rep["alert_count"] == 1 and rep["sites_checked"] == 0
+    # under-count sites are ignored
+    numerics.reset()
+    numerics.record("s", "surrogate_fused", "uniform:pm_csi", np.ones(8))
+    assert drift.check_observed(numerics.snapshot(), base,
+                                min_count=256)["sites_checked"] == 0
+
+
+def test_drift_cli(tmp_path):
+    from repro.obs import drift
+
+    b = tmp_path / "base.json"
+    assert drift.main(["--baseline", str(b), "--update",
+                       "--n", str(1 << 10)]) == 0
+    out = tmp_path / "report.json"
+    assert drift.main(["--baseline", str(b), "--check",
+                       "--n", str(1 << 10), "--out", str(out)]) == 0
+    assert out.exists()

@@ -1,0 +1,86 @@
+"""Hypothesis sweep of the audit-sampling invariants (fixed cases live in
+tests/test_numerics_audit.py, mirroring how tests/test_engine_property.py
+widens the CRN contract tests).
+
+The contract under test: an audit decision is a pure function of
+(call key, site) — for serving, of (server seed, request id) — so the
+audited set is invariant to evaluation order, shard partitioning of the
+call stream, and any amount of interleaved unrelated traffic; and u < f
+sampling is monotone (raising the fraction only ever adds calls).
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (CI installs it)")
+from hypothesis import given, settings, strategies as st
+
+from repro.obs import numerics
+
+_keys = st.binary(min_size=1, max_size=32)
+_sites = st.text(st.characters(min_codepoint=33, max_codepoint=126),
+                 max_size=12)
+
+
+@settings(deadline=None, max_examples=100)
+@given(_keys, _sites)
+def test_sample_u_pure_and_in_range(key, site):
+    u = numerics.sample_u(key, site)
+    assert 0.0 <= u < 1.0
+    assert numerics.sample_u(key, site) == u
+
+
+@settings(deadline=None, max_examples=100)
+@given(_keys, _sites,
+       st.floats(0.0, 1.0, allow_nan=False),
+       st.floats(0.0, 1.0, allow_nan=False))
+def test_sample_decision_monotone_in_fraction(key, site, f1, f2):
+    lo, hi = sorted((f1, f2))
+    if numerics.sample_decision(key, site, fraction=lo):
+        assert numerics.sample_decision(key, site, fraction=hi)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(_keys, min_size=1, max_size=24, unique=True),
+       st.randoms(use_true_random=False),
+       st.integers(1, 4),
+       st.floats(0.05, 0.95))
+def test_sampled_set_invariant_to_order_and_sharding(keys, rnd, shards, f):
+    site = "prop"
+    expect = {k for k in keys
+              if numerics.sample_decision(k, site, fraction=f)}
+    # any evaluation order yields the same sampled set
+    shuffled = list(keys)
+    rnd.shuffle(shuffled)
+    assert {k for k in shuffled
+            if numerics.sample_decision(k, site, fraction=f)} == expect
+    # any contiguous sharding of the stream unions back to the same set
+    per_shard = [keys[i::shards] for i in range(shards)]
+    unioned = set()
+    for part in per_shard:
+        unioned |= {k for k in part
+                    if numerics.sample_decision(k, site, fraction=f)}
+    assert unioned == expect
+
+
+@settings(deadline=None, max_examples=100)
+@given(st.integers(-2**63, 2**63 - 1), st.text(max_size=16),
+       st.integers(0, 7), st.integers(1, 8),
+       st.sampled_from(["batched", "per_slot"]))
+def test_request_sampling_ignores_slot_and_mode(salt, rid, slot, slots, mode):
+    """The serving decision reads (salt, rid) alone — recomputing it under
+    any nominal slot index / slot count / scheduler mode cannot change it
+    (the extra arguments simply do not enter the hash)."""
+    u = numerics.request_sample_u(salt, rid)
+    del slot, slots, mode  # not inputs — that IS the invariant
+    assert numerics.request_sample_u(salt, rid) == u
+    assert 0.0 <= u < 1.0
+
+
+@settings(deadline=None, max_examples=100)
+@given(st.integers(-2**31, 2**31 - 1), _sites)
+def test_int_and_bytes_key_spellings_agree(key_int, site):
+    """Integer keys hash as their 16-byte little-endian spelling, so host
+    code holding an int and code holding the serialized bytes sample
+    identically."""
+    as_bytes = key_int.to_bytes(16, "little", signed=True)
+    assert (numerics.sample_u(key_int, site)
+            == numerics.sample_u(as_bytes, site))

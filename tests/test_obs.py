@@ -134,6 +134,83 @@ def test_metrics_export_and_reset(tmp_path):
     assert metrics.snapshot()["counters"] == {}
 
 
+def test_metrics_series_cap_collapses_to_overflow():
+    reg = metrics.MetricsRegistry(series_cap=3)
+    for i in range(3):
+        reg.counter_inc("hot", rid=i)
+    with pytest.warns(RuntimeWarning, match="hot"):
+        reg.counter_inc("hot", rid=99)
+    reg.counter_inc("hot", rid=100)  # warns once, keeps collapsing
+    snap = reg.snapshot()["counters"]
+    assert snap["hot{__overflow__=true}"] == 2
+    assert sum(k.startswith("hot{rid=") for k in snap) == 3
+    # existing series keep accumulating past the cap
+    reg.counter_inc("hot", rid=0)
+    assert reg.get_counter("hot", rid=0) == 2
+    # other metric names are unaffected by one name's overflow
+    reg.gauge_set("cold", 1.0, k="v")
+    assert reg.snapshot()["gauges"]["cold{k=v}"] == 1.0
+    reg.reset()
+    reg.counter_inc("hot", rid=0)  # cap state resets with the data
+    assert reg.snapshot()["counters"] == {"hot{rid=0}": 1}
+
+
+def test_export_paths_are_pid_tagged_for_multiprocess(tmp_path):
+    import os
+
+    with obs.enabled_scope(True):
+        metrics.counter_inc("a")
+        with trace.span("s"):
+            pass
+        pm = metrics.export_metrics(tmp_path / "metrics_x.json")
+        pt = trace.export_trace(tmp_path / "trace_x.json")
+        pe = metrics.export_metrics(tmp_path / "metrics_x.json", tag="")
+        pg = metrics.export_metrics(tmp_path / "metrics_x.json", tag="w3")
+    pid = os.getpid()
+    assert pm.name == f"metrics_x_{pid}.json"
+    assert pt.name == f"trace_x_{pid}.json"
+    assert pe.name == "metrics_x.json"  # tag="" keeps the exact name
+    assert pg.name == "metrics_x_w3.json"
+    # the CI validator's globs still match the tagged names
+    assert pm in tmp_path.glob("metrics_*.json")
+    assert pt in tmp_path.glob("trace_*.json")
+
+
+def test_validate_metrics_snapshot_schema():
+    with obs.enabled_scope(True):
+        metrics.counter_inc("c", op="a")
+        metrics.gauge_set("g", 1.5)
+        metrics.observe("h", 2.0, tier="x")
+    assert metrics.validate_metrics_snapshot(metrics.snapshot()) == []
+    assert metrics.validate_metrics_snapshot([]) != []
+    assert metrics.validate_metrics_snapshot({}) != []
+    bad = {"counters": {"c{op=a}": 1, "c{tier=b}": "NaN?"},
+           "gauges": {"g{": 0}, "histograms": {"h": {"count": 1}}}
+    errs = metrics.validate_metrics_snapshot(bad)
+    assert any("non-numeric" in e for e in errs)
+    assert any("malformed" in e for e in errs)
+    assert any("unstable label set" in e for e in errs)
+    assert any("expected keys" in e for e in errs)
+    # __overflow__ series are exempt from the stable-label-set rule
+    ok = {"counters": {"c{op=a}": 1, "c{__overflow__=true}": 2},
+          "gauges": {}, "histograms": {}}
+    assert metrics.validate_metrics_snapshot(ok) == []
+
+
+def test_trace_cli_validates_metrics_snapshots(tmp_path):
+    with obs.enabled_scope(True):
+        metrics.counter_inc("c", op="a")
+        good = metrics.export_metrics(tmp_path / "metrics_good.json", tag="")
+    bad = tmp_path / "metrics_bad.json"
+    bad.write_text(json.dumps({"counters": {"c{op=a}": 1, "c{x=y}": 2},
+                               "gauges": {}, "histograms": {}}))
+    junk = tmp_path / "junk.json"
+    junk.write_text(json.dumps({"neither": 1}))
+    assert trace.main(["--validate", str(good)]) == 0
+    assert trace.main(["--validate", str(good), str(bad)]) == 1
+    assert trace.main(["--validate", str(junk)]) == 1
+
+
 # ---------------------------------------------------------------------------
 # stats_dataclass: the EvalStats/IslandStats dict contract (satellite:
 # deduplicated as_dict/merge — shapes must not have changed)
